@@ -1,0 +1,113 @@
+//! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md):
+//! starts the TCP serving front backed by the router/engine thread,
+//! fires a trace of long-context requests at it over a real socket, and
+//! reports latency percentiles + aggregate throughput.
+//!
+//!     cargo run --release --example serve_batch -- \
+//!         [--requests 12] [--disk nvme] [--policy kvswap]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use kvswap::baselines::{configure, Budget};
+use kvswap::coordinator::batcher::BatcherConfig;
+use kvswap::coordinator::router::Router;
+use kvswap::coordinator::{EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::latency_summary;
+use kvswap::runtime::default_artifacts_dir;
+use kvswap::util::cli::Args;
+use kvswap::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 12);
+    let disk = DiskProfile::by_name(&args.str_or("disk", "nvme")).expect("disk");
+    let policy = Policy::by_name(&args.str_or("policy", "kvswap")).expect("policy");
+    let (policy, kv) = configure(&policy, Budget::Relaxed, 4);
+    let addr = args.str_or("addr", "127.0.0.1:7471");
+
+    let engine_cfg = EngineConfig {
+        preset: "nano".into(),
+        batch: 1, // router resizes per wave
+        policy,
+        kv,
+        disk,
+        real_time: false,
+        time_scale: 1.0,
+        max_context: 2048,
+        seed: 3,
+    };
+    let batcher_cfg = BatcherConfig {
+        supported: vec![1, 2, 4],
+        linger_s: 0.05,
+        max_context: 2048,
+    };
+    let router = Router::spawn(default_artifacts_dir(), engine_cfg, batcher_cfg);
+
+    // server thread (accepts one connection then exits)
+    let addr2 = addr.clone();
+    let server = std::thread::spawn(move || -> anyhow::Result<Router> {
+        kvswap::server::serve(&addr2, &router, Some(1))?;
+        Ok(router)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // client: submit the trace over the socket
+    println!("client: sending {n_requests} requests to {addr}");
+    let t0 = std::time::Instant::now();
+    let mut sock = TcpStream::connect(&addr)?;
+    for i in 0..n_requests {
+        let context = [512usize, 1024, 1536][i % 3];
+        let decode = 16 + (i % 3) * 8;
+        writeln!(
+            sock,
+            r#"{{"id": {i}, "context": {context}, "decode": {decode}, "seed": {i}}}"#
+        )?;
+    }
+    writeln!(sock, "quit")?;
+
+    let reader = BufReader::new(sock.try_clone()?);
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    let mut batches = std::collections::BTreeMap::<usize, usize>::new();
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if j.get("error").is_some() {
+            anyhow::bail!("server error: {line}");
+        }
+        latencies.push(j.f64_or("latency_ms", 0.0));
+        tokens += j.get("tokens").and_then(|t| t.as_arr()).map(|a| a.len()).unwrap_or(0);
+        *batches.entry(j.usize_or("batch", 0)).or_insert(0) += 1;
+        println!(
+            "  completion id={} tokens={} latency={:.0}ms (batch {})",
+            j.usize_or("id", 0),
+            j.get("tokens").and_then(|t| t.as_arr()).map(|a| a.len()).unwrap_or(0),
+            j.f64_or("latency_ms", 0.0),
+            j.usize_or("batch", 0),
+        );
+        if latencies.len() == n_requests {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let router = server.join().map_err(|_| anyhow::anyhow!("server panicked"))??;
+    router.stop()?;
+
+    let summary = latency_summary(&latencies);
+    println!("\n=== serve_batch summary ===");
+    println!("requests completed: {}/{n_requests}", summary.n);
+    println!("generated tokens:   {tokens}");
+    println!("wall time:          {wall:.2}s  ({:.2} tok/s end-to-end)", tokens as f64 / wall);
+    println!(
+        "latency ms: p50={:.0} p90={:.0} p99={:.0} mean={:.0}",
+        summary.p50_ms, summary.p90_ms, summary.p99_ms, summary.mean_ms
+    );
+    println!("batch-size histogram: {batches:?}");
+    anyhow::ensure!(summary.n == n_requests, "lost completions");
+    Ok(())
+}

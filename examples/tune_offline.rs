@@ -1,0 +1,109 @@
+//! Offline parameter tuning end-to-end (paper §3.5 / Appendix A): build
+//! the lookup tables, profile live engine points, run the greedy solver
+//! for NVMe and eMMC, then *validate* the chosen configs by running them
+//! and checking the solver's overlap prediction against measurement.
+//!
+//!     cargo run --release --example tune_offline
+
+use kvswap::bench;
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::{Engine, EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::{Phase, Table};
+use kvswap::tuner::{self, DelayModel, ProfileSample, SolverConfig};
+
+fn main() -> anyhow::Result<()> {
+    let rt = bench::runtime()?;
+    let spec = rt.manifest.presets["nano"].spec.clone();
+    let table = tuner::tables::ReuseTable::from_locality_model(
+        64,
+        0.77,
+        &[0, 16, 32, 64, 128, 256, 512],
+    );
+
+    let mut results = Table::new(&[
+        "disk", "G", "rank", "C", "pred_unhidden", "meas_tok/s", "meas_io_wait_ms",
+    ]);
+    for disk in [DiskProfile::nvme(), DiskProfile::emmc()] {
+        // 1. profile the live engine at a few (b, S) points
+        let mut delays = DelayModel::default();
+        for (b, s) in [(1usize, 2048usize), (4, 2048)] {
+            let mut e = Engine::new(
+                rt.clone(),
+                EngineConfig {
+                    preset: "nano".into(),
+                    batch: b,
+                    policy: Policy::KvSwap,
+                    kv: KvSwapConfig::default(),
+                    disk: disk.clone(),
+                    real_time: false,
+                    time_scale: 1.0,
+                    max_context: s,
+                    seed: 0,
+                },
+            )?;
+            e.ingest_synthetic(&vec![s - 64; b])?;
+            let (stats, _, _) = e.decode(6, false, None)?;
+            let per = stats.steps as f64 * spec.n_layers as f64;
+            delays.add(ProfileSample {
+                batch: b,
+                context: s,
+                group: 4,
+                rank: 16,
+                reuse_slots: KvSwapConfig::default().reuse_slots,
+                t_io: stats.breakdown.get(Phase::IoWait).as_secs_f64() / per,
+                t_compute: (stats.breakdown.get(Phase::Attention)
+                    + stats.breakdown.get(Phase::Predict))
+                .as_secs_f64()
+                    / per,
+            });
+            println!("[profile] disk={} b={b} S={s} done", disk.name);
+        }
+
+        // 2. solve under a 2 MiB/row budget
+        let solver_cfg = SolverConfig {
+            budget_bytes: 2 << 20,
+            s_max: 2048,
+            b_max: 4,
+            ..Default::default()
+        };
+        let sol = tuner::solver::solve_point(
+            &spec, &disk, &table, &delays, &solver_cfg, 4, 2048,
+        );
+        println!(
+            "[solve] disk={}: G={} rank={} C={} unhidden={:.2} feasible={}",
+            disk.name, sol.group, sol.rank, sol.reuse_slots, sol.unhidden_io, sol.feasible
+        );
+
+        // 3. validate: run the tuned config and measure
+        let kv = sol.to_kvswap_config(&KvSwapConfig::default());
+        let mut e = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                preset: "nano".into(),
+                batch: 4,
+                policy: Policy::KvSwap,
+                kv,
+                disk: disk.clone(),
+                real_time: false,
+                time_scale: 1.0,
+                max_context: 2048,
+                seed: 0,
+            },
+        )?;
+        e.ingest_synthetic(&vec![2048 - 64; 4])?;
+        let (stats, _, _) = e.decode(10, false, None)?;
+        results.row(vec![
+            disk.name.to_string(),
+            sol.group.to_string(),
+            sol.rank.to_string(),
+            sol.reuse_slots.to_string(),
+            format!("{:.2}", sol.unhidden_io),
+            format!("{:.1}", stats.tokens_per_sec()),
+            format!("{:.1}", stats.breakdown.per_step_ms(Phase::IoWait)),
+        ]);
+    }
+    println!("\n=== tuned configurations, validated ===");
+    println!("{}", results.render());
+    Ok(())
+}

@@ -1,0 +1,341 @@
+"""AOT compile path: lower every L2 function to HLO-text artifacts.
+
+Emits, per model preset:
+
+    artifacts/<preset>/weights.bin          raw f32 weights + SVD adapters
+    artifacts/<preset>/b<N>/<name>.hlo.txt  one HLO module per (fn, shapes)
+    artifacts/manifest.json                 the contract rust parses
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs on the request path — the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate, model
+from .specs import LAYER_TENSORS, PRESETS, ModelSpec, serialize_weights
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Tunable-default runtime parameters recorded in the manifest; the Rust
+# tuner (paper §3.5 / Appendix A) can override everything that does not
+# change artifact shapes (G, M, C) and picks among compiled variants for
+# those that do (rank, Ncap, P).
+DEFAULTS = {
+    "group_size": 4,
+    "n_groups": 64,  # M; M*G = 256 selected entries (paper: MG = 400)
+    "rank": 16,  # sigma = 128/16 = 8
+    "rb_slots": 16,  # rolling-buffer slots exposed to attention
+    "p_sel": 272,  # 256 selected + 16 rolling-buffer slots
+}
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(fn, args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def layer_weight_sds(spec: ModelSpec):
+    from .specs import layer_shapes
+
+    shapes = layer_shapes(spec)
+    return [sds(shapes[t]) for t in LAYER_TENSORS]
+
+
+class Plan:
+    """Collects artifact definitions, lowers them, writes the manifest."""
+
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.entries: List[dict] = []
+        self.verbose = verbose
+        self.t0 = time.time()
+
+    def emit(self, preset: str, batch: int, name: str, fn, args, *,
+             params: dict, weight_args: List[str], n_outputs: int):
+        rel = f"{preset}/b{batch}/{name}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        t = time.time()
+        text = to_hlo_text(fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        if self.verbose:
+            print(
+                f"[aot +{time.time()-self.t0:6.1f}s] {rel}"
+                f" ({len(text)//1024} KiB, {time.time()-t:.1f}s)",
+                flush=True,
+            )
+        self.entries.append(
+            {
+                "preset": preset,
+                "batch": batch,
+                "name": name,
+                "params": params,
+                "path": rel,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+                ],
+                "weight_args": weight_args,
+                "n_outputs": n_outputs,
+            }
+        )
+
+
+def emit_preset(
+    plan: Plan,
+    spec: ModelSpec,
+    *,
+    batches: List[int],
+    ncaps: List[int],
+    ranks: List[int],
+    full_ncaps: List[int],
+    tp_only_batches: List[int],
+    prefill_ncap: int,
+    prefill_chunk: int,
+    fused_group: int,
+) -> dict:
+    """Lower all artifacts for one preset; returns the manifest stanza."""
+    d, hq, hkv, hd = spec.d_model, spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+    p_sel = DEFAULTS["p_sel"]
+    lw = layer_weight_sds(spec)
+    r_def = DEFAULTS["rank"]
+
+    for b in batches:
+        tp_only = b in tp_only_batches
+        # --- embed / logits -------------------------------------------------
+        plan.emit(
+            spec.name, b, "embed", model.embed_fn(spec),
+            [sds((b,), I32), sds((spec.vocab, d))],
+            params={}, weight_args=["emb"], n_outputs=1,
+        )
+        plan.emit(
+            spec.name, b, "logits_argmax", model.logits_argmax_fn(spec),
+            [sds((b, d)), sds((d,)), sds((spec.vocab, d))],
+            params={}, weight_args=["fln", "emb"], n_outputs=2,
+        )
+        # --- decode over selected KV (the KVSwap hot path) -------------------
+        plan.emit(
+            spec.name, b, f"decode_p{p_sel}", model.decode_block_fn(spec),
+            [
+                sds((b, d)),
+                sds((b, hkv, p_sel, hd)),
+                sds((b, hkv, p_sel, hd)),
+                sds((b, p_sel)),
+                sds((b,), I32),
+                *lw,
+            ],
+            params={"p": p_sel}, weight_args=list(LAYER_TENSORS), n_outputs=3,
+        )
+        # --- full-attention decode (oracle + FlexGen/vLLM baselines);
+        # also needed at throughput-only batches for the vLLM-like rows
+        for ncap in full_ncaps:
+            plan.emit(
+                spec.name, b, f"decode_full_n{ncap}",
+                model.decode_block_fn(spec),
+                [
+                    sds((b, d)),
+                    sds((b, hkv, ncap, hd)),
+                    sds((b, hkv, ncap, hd)),
+                    sds((b, ncap)),
+                    sds((b,), I32),
+                    *lw,
+                ],
+                params={"p": ncap}, weight_args=list(LAYER_TENSORS),
+                n_outputs=3,
+            )
+        # --- predictor ------------------------------------------------------
+        for ncap in ncaps:
+            plan.emit(
+                spec.name, b, f"predict_n{ncap}_r{r_def}",
+                model.predict_scores_fn(spec),
+                [
+                    sds((b, d)),
+                    sds((b, ncap, r_def)),
+                    sds((b,), I32),
+                    sds((b,), I32),
+                    sds((d,)),
+                    sds((d, hq * hd)),
+                    sds((hd * hkv, r_def)),
+                ],
+                params={"ncap": ncap, "rank": r_def},
+                weight_args=["ln1", "wq", "A"], n_outputs=1,
+            )
+        if not tp_only:
+            # quality-sweep Ncap: large enough for low-coverage contexts
+            ncap_q = 2048 if 2048 in ncaps else min(ncaps)
+            for r in ranks:
+                if r == r_def:
+                    continue
+                plan.emit(
+                    spec.name, b, f"predict_n{ncap_q}_r{r}",
+                    model.predict_scores_fn(spec),
+                    [
+                        sds((b, d)),
+                        sds((b, ncap_q, r)),
+                        sds((b,), I32),
+                        sds((b,), I32),
+                        sds((d,)),
+                        sds((d, hq * hd)),
+                        sds((hd * hkv, r)),
+                    ],
+                    params={"ncap": ncap_q, "rank": r},
+                    weight_args=["ln1", "wq", "A"], n_outputs=1,
+                )
+            # fused grouped predictor (perf/ablation variant)
+            plan.emit(
+                spec.name, b, f"predict_grouped_n{ncap_q}_r{r_def}_g{fused_group}",
+                model.grouped_predict_fn(spec, fused_group),
+                [
+                    sds((b, d)),
+                    sds((b, ncap_q, r_def)),
+                    sds((b,), I32),
+                    sds((b,), I32),
+                    sds((d,)),
+                    sds((d, hq * hd)),
+                    sds((hd * hkv, r_def)),
+                ],
+                params={"ncap": ncap_q, "rank": r_def, "group": fused_group},
+                weight_args=["ln1", "wq", "A"], n_outputs=1,
+            )
+            # --- prefill ---------------------------------------------------
+            plan.emit(
+                spec.name, b, f"embed_chunk_t{prefill_chunk}",
+                model.embed_chunk_fn(spec),
+                [sds((b, prefill_chunk), I32), sds((spec.vocab, d))],
+                params={"t": prefill_chunk}, weight_args=["emb"], n_outputs=1,
+            )
+            plan.emit(
+                spec.name, b, f"prefill_t{prefill_chunk}_n{prefill_ncap}",
+                model.prefill_block_fn(spec),
+                [
+                    sds((b, prefill_chunk, d)),
+                    sds((b, hkv, prefill_ncap, hd)),
+                    sds((b, hkv, prefill_ncap, hd)),
+                    sds((b,), I32),
+                    *lw,
+                ],
+                params={"t": prefill_chunk, "ncap": prefill_ncap},
+                weight_args=list(LAYER_TENSORS), n_outputs=3,
+            )
+
+    return {
+        "model": spec.to_json(),
+        "defaults": dict(DEFAULTS),
+        "ranks": ranks,
+        "ncaps": ncaps,
+        "batches": batches,
+        "prefill": {"chunk": prefill_chunk, "ncap": prefill_ncap},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--presets", default="nano,small,med",
+        help="comma-separated subset of: " + ",".join(PRESETS),
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="minimal artifact set for fast iteration (nano, b<=2)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    plan = Plan(out_dir)
+    manifest: Dict[str, dict] = {"presets": {}, "version": 1}
+
+    preset_names = [p for p in args.presets.split(",") if p]
+    if args.quick:
+        preset_names = ["nano"]
+
+    for pname in preset_names:
+        spec = PRESETS[pname]
+        print(f"[aot] preset {pname}: {spec.n_params()/1e6:.2f}M params", flush=True)
+
+        if pname == "nano":
+            kw = dict(
+                batches=[1, 2] if args.quick else [1, 2, 4, 8, 16],
+                ncaps=[2048] if args.quick else [1024, 2048, 4096, 8192],
+                ranks=[4, 8, 16, 32],
+                full_ncaps=[2048] if args.quick else [2048, 8192],
+                tp_only_batches=[] if args.quick else [16],
+                prefill_ncap=2048,
+                prefill_chunk=128,
+                fused_group=DEFAULTS["group_size"],
+            )
+        else:
+            kw = dict(
+                batches=[1, 8],
+                ncaps=[2048, 8192],
+                ranks=[16],
+                full_ncaps=[2048],
+                tp_only_batches=[8],
+                prefill_ncap=2048,
+                prefill_chunk=128,
+                fused_group=DEFAULTS["group_size"],
+            )
+
+        # Weights + SVD adapters (offline, paper §3.2: no prefill-time SVD).
+        weights = __import__(
+            "compile.specs", fromlist=["init_weights"]
+        ).init_weights(spec, seed=args.seed)
+        adapters = calibrate.build_adapters(
+            spec, weights, ranks=kw["ranks"],
+            n_batches=1 if args.quick else 2,
+            batch=2, seq=256, seed=args.seed + 1,
+        )
+        blob, index = serialize_weights({**weights, **adapters})
+        wpath = os.path.join(out_dir, pname, "weights.bin")
+        os.makedirs(os.path.dirname(wpath), exist_ok=True)
+        with open(wpath, "wb") as f:
+            f.write(blob)
+        print(f"[aot] {pname}/weights.bin: {len(blob)/2**20:.1f} MiB", flush=True)
+
+        stanza = emit_preset(plan, spec, **kw)
+        stanza["weights"] = {"path": f"{pname}/weights.bin", "tensors": index}
+        manifest["presets"][pname] = stanza
+
+    manifest["artifacts"] = plan.entries
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"[aot] wrote {len(plan.entries)} artifacts + manifest "
+        f"in {time.time()-plan.t0:.0f}s -> {mpath}",
+        flush=True,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

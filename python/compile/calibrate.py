@@ -1,0 +1,82 @@
+"""Offline K-cache calibration: SVD low-rank adapters (paper §3.2).
+
+KVSwap pre-computes, per layer, a low-rank adapter A in R^{(Hkv*d) x r}
+from a flattened calibration K cache: SVD(K_ftn) = U diag(S) V^T, A = the
+top-r right singular vectors. The compressed cache is K_lr = flatten(K) A.
+The paper draws calibration samples from general-purpose corpora (C4 /
+WikiText); with no network access, we draw random-token prompts from the
+same distribution the benchmark workload generator uses — DESIGN.md §2
+documents the substitution (the adapter only has to capture the K-space
+geometry of *this* model, which random prompts through the real weights
+do).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from . import model
+from .specs import ModelSpec
+
+
+def collect_calibration_k(
+    spec: ModelSpec,
+    weights: Dict[str, np.ndarray],
+    *,
+    n_batches: int = 2,
+    batch: int = 2,
+    seq: int = 256,
+    seed: int = 1234,
+) -> List[np.ndarray]:
+    """Run real prefills over random-token prompts; return per-layer
+    flattened K matrices [n_batches*batch*seq, Hkv*d] (post-RoPE)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    per_layer: List[List[np.ndarray]] = [[] for _ in range(spec.n_layers)]
+    jw = {k: jnp.asarray(v) for k, v in weights.items()}
+    for _ in range(n_batches):
+        tokens = rng.integers(0, spec.vocab, size=(batch, seq))
+        _, ks, _ = model.reference_prefill(spec, jw, jnp.asarray(tokens))
+        for li, k in enumerate(ks):
+            # [b, Hkv, S, d] -> [b*S, Hkv*d] (token-major flatten, §3.2)
+            arr = np.asarray(k).transpose(0, 2, 1, 3)
+            per_layer[li].append(arr.reshape(-1, spec.kv_flat_dim))
+    return [np.concatenate(chunks, axis=0) for chunks in per_layer]
+
+
+def svd_adapter(k_flat: np.ndarray, rank: int) -> np.ndarray:
+    """Top-`rank` right singular vectors of the calibration K matrix."""
+    # economy SVD; k_flat is [N, HD] with HD small (128)
+    _, _, vt = np.linalg.svd(k_flat, full_matrices=False)
+    return np.ascontiguousarray(vt[:rank].T.astype(np.float32))  # [HD, r]
+
+
+def build_adapters(
+    spec: ModelSpec,
+    weights: Dict[str, np.ndarray],
+    ranks: List[int],
+    **collect_kw,
+) -> Dict[str, np.ndarray]:
+    """Return {'layer{i}.A{r}': [HD, r]} for every layer and rank."""
+    k_flats = collect_calibration_k(spec, weights, **collect_kw)
+    out: Dict[str, np.ndarray] = {}
+    for li, k_flat in enumerate(k_flats):
+        # One SVD per layer serves all ranks (nested subspaces).
+        _, _, vt = np.linalg.svd(k_flat, full_matrices=False)
+        for r in ranks:
+            out[f"layer{li}.A{r}"] = np.ascontiguousarray(
+                vt[:r].T.astype(np.float32)
+            )
+    return out
+
+
+def reconstruction_error(k_flat: np.ndarray, a: np.ndarray) -> float:
+    """Relative Frobenius error of K ≈ (K A) A^T — quality of the adapter."""
+    k_lr = k_flat @ a
+    k_rec = k_lr @ a.T
+    return float(
+        np.linalg.norm(k_flat - k_rec) / max(np.linalg.norm(k_flat), 1e-9)
+    )

@@ -1,0 +1,2 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the KVSwap stack."""
+from . import attention, prefill, ref, score  # noqa: F401

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: GQA attention over gathered (selected) KV groups.
+
+This is the decode hot-spot of the KVSwap system: attention computed only
+over the KV entries the grouped predictor selected (reuse-buffer hits +
+freshly loaded groups + rolling-buffer entries), already gathered into a
+contiguous [P, d] block by the Rust KV-cache manager (paper §3.4.4 mapping
+table gives the attention kernel a contiguous logical view).
+
+Hardware adaptation (DESIGN.md §3): on a real TPU the [Hkv, P, d] selected
+block is exactly one VMEM-resident tile per batch row — the BlockSpec below
+expresses the HBM->VMEM schedule that the paper's disk->RAM groups express:
+one *prediction group* is one tile row, so the disk-page-aligned grouping
+and the MXU tiling coincide. Both matmuls ([Hq,d]x[d,P] and [Hq,P]x[P,d])
+are MXU-shaped when P is a multiple of 128. interpret=True is mandatory on
+this CPU-only image (Mosaic custom-calls cannot execute on the CPU plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF  # noqa: F401  (re-exported for callers)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, n_rep, scale):
+    """One batch row: q [1,Hq,d], k/v [1,Hkv,P,d], mask [1,P] -> o [1,Hq,d]."""
+    q = q_ref[0]  # [Hq, d]
+    k = k_ref[0]  # [Hkv, P, d]
+    v = v_ref[0]
+    m = mask_ref[0]  # [P]
+    hkv = k.shape[0]
+    d = q.shape[-1]
+    qg = q.reshape(hkv, n_rep, d)
+    # Scores on the "MXU": one [n_rep, d] x [d, P] matmul per KV head.
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (0,))), precision="highest"
+    )  # [Hkv, n_rep, P]
+    s = s * scale + m[None, None, :]
+    # Numerically-stable masked softmax, fused in-register.
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(
+        w, v, (((2,), (1,)), ((0,), (0,))), precision="highest"
+    )  # [Hkv, n_rep, d]
+    o_ref[0] = o.reshape(hkv * n_rep, d)
+
+
+def gathered_attention(q, k_sel, v_sel, mask, *, scale=None, interpret=True):
+    """Pallas gathered-attention. Shapes as in ref.gathered_attention_ref."""
+    b, hq, d = q.shape
+    hkv, p = k_sel.shape[1], k_sel.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kern = functools.partial(_attn_kernel, n_rep=n_rep, scale=float(scale))
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        # One batch row per program: the whole selected block fits VMEM
+        # (P*d*4B per KV head; 272*32*4 = 34 KiB/head at default config).
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hkv, p, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, p, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, p), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(q, k_sel, v_sel, mask)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: chunked causal prefill attention.
+
+Prefill computes attention for a chunk of T prompt tokens against the whole
+cache written so far (including the chunk itself). The KVSwap runtime calls
+this layer-by-layer while streaming the produced KV groups to disk
+(paper §3.4: "writes it to disk in a layer-by-layer fashion").
+
+TPU mapping: one batch row per program; scores tile is [T, S] per KV head.
+T=128 keeps the tile within VMEM up to S=8K at f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *, n_rep, scale):
+    q = q_ref[0]  # [T, Hq, d]
+    k = k_ref[0]  # [Hkv, S, d]
+    v = v_ref[0]
+    start = start_ref[0, 0]  # scalar i32
+    t, hq, d = q.shape
+    hkv, s_len = k.shape[0], k.shape[1]
+    qg = q.reshape(t, hkv, n_rep, d)
+    # [T, Hkv, n_rep, d] x [Hkv, S, d] -> [Hkv, T, n_rep, S]
+    s = jax.lax.dot_general(
+        qg.transpose(1, 0, 2, 3),
+        k,
+        (((3,), (2,)), ((0,), (0,))),
+        precision="highest",
+    )  # [Hkv, T, n_rep, S]
+    key_pos = jax.lax.iota(jnp.int32, s_len)  # [S]
+    q_pos = start + jax.lax.iota(jnp.int32, t)  # [T]
+    causal = key_pos[None, :] <= q_pos[:, None]  # [T, S]
+    s = s * scale
+    s = jnp.where(causal[None, :, None, :], s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(
+        w, v, (((3,), (1,)), ((0,), (0,))), precision="highest"
+    )  # [Hkv, T, n_rep, d]
+    o_ref[0] = o.transpose(1, 0, 2, 3).reshape(t, hq, d)
+
+
+def prefill_attention(q, k_cache, v_cache, start, *, scale=None, interpret=True):
+    """Pallas chunked prefill attention. Shapes as in prefill_attention_ref."""
+    b, t, hq, d = q.shape
+    hkv, s_len = k_cache.shape[1], k_cache.shape[2]
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    start2 = start.reshape(b, 1).astype(jnp.int32)
+    kern = functools.partial(_prefill_kernel, n_rep=n_rep, scale=float(scale))
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, hq, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, s_len, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, s_len, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, hq, d), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, hq, d), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, start2)

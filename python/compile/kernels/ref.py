@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness signal).
+
+Each function here is the mathematical definition the kernels in
+``attention.py`` / ``score.py`` / ``prefill.py`` must match; pytest
+(`tests/test_kernels.py`) asserts allclose between kernel and oracle over
+hypothesis-driven shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # additive-mask "minus infinity" that keeps softmax NaN-free
+
+
+def gathered_attention_ref(q, k_sel, v_sel, mask, scale):
+    """GQA attention over gathered (selected) KV entries.
+
+    q:     [b, Hq, d]      (RoPE already applied)
+    k_sel: [b, Hkv, P, d]  gathered keys (stored post-RoPE)
+    v_sel: [b, Hkv, P, d]
+    mask:  [b, P]          additive mask (0 = valid, NEG_INF = padding)
+    -> [b, Hq, d]
+    """
+    b, hq, d = q.shape
+    hkv, p = k_sel.shape[1], k_sel.shape[2]
+    n_rep = hq // hkv
+    qg = q.reshape(b, hkv, n_rep, d)
+    s = jnp.einsum("bhrd,bhpd->bhrp", qg, k_sel) * scale
+    s = s + mask[:, None, None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bhrp,bhpd->bhrd", w, v_sel)
+    return o.reshape(b, hq, d)
+
+
+def token_scores_ref(q_lr, k_lr, lens):
+    """Low-rank approximate attention scores, head-summed (paper §3.3).
+
+    q_lr: [b, Hq, r]   low-rank query vectors  Q_h A_{g(h)}
+    k_lr: [b, N, r]    joint-head compressed K cache rows
+    lens: [b]          number of valid rows in k_lr
+    -> [b, N] per-token importance scores; invalid tokens = NEG_INF
+    """
+    s = jnp.einsum("bhr,bnr->bhn", q_lr, k_lr)
+    tok = jnp.sum(s, axis=1)  # head-sum (paper: "summing across all heads")
+    n = k_lr.shape[1]
+    idx = jnp.arange(n)[None, :]
+    return jnp.where(idx < lens[:, None], tok, NEG_INF)
+
+
+def grouped_scores_ref(q_lr, k_lr, lens, group):
+    """Fused variant: token scores -> per-group ReduceMax (paper Fig. 6).
+
+    -> [b, N // group] representative score per group of `group`
+    consecutive tokens.
+    """
+    tok = token_scores_ref(q_lr, k_lr, lens)
+    b, n = tok.shape
+    assert n % group == 0
+    return jnp.max(tok.reshape(b, n // group, group), axis=-1)
+
+
+def prefill_attention_ref(q, k_cache, v_cache, start, scale):
+    """Chunked causal prefill attention.
+
+    q:       [b, T, Hq, d]   RoPE-applied queries for chunk tokens
+                             [start, start+T)
+    k_cache: [b, Hkv, S, d]  cache with the chunk's keys already written at
+                             [start, start+T) (post-RoPE)
+    v_cache: [b, Hkv, S, d]
+    start:   [b] i32         absolute position of the first chunk token
+    -> [b, T, Hq, d]
+    """
+    b, t, hq, d = q.shape
+    hkv, s_len = k_cache.shape[1], k_cache.shape[2]
+    n_rep = hq // hkv
+    qg = q.reshape(b, t, hkv, n_rep, d)
+    s = jnp.einsum("bthrd,bhpd->bthrp", qg, k_cache) * scale
+    key_pos = jnp.arange(s_len)[None, None, :]
+    q_pos = start[:, None, None] + jnp.arange(t)[None, :, None]
+    causal = key_pos <= q_pos  # [b, T, S]
+    s = jnp.where(causal[:, :, None, None, :], s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bthrp,bhpd->bthrd", w, v_cache)
+    return o.reshape(b, t, hq, d)

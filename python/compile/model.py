@@ -1,0 +1,313 @@
+"""L2: the GQA transformer compute graph, built from the L1 Pallas kernels.
+
+Every function here is a *pure* jax function over arrays with static
+shapes; ``aot.py`` lowers each to an HLO-text artifact the Rust runtime
+executes via PJRT. Weights are runtime arguments (held as persistent
+PjRtBuffers on the Rust side), never HLO constants.
+
+Decode-path split of responsibilities (DESIGN.md §4): HLO owns dense math
+(projections, RoPE, kernel attention, MLP); the Rust coordinator owns all
+dynamic control flow (group selection, reuse-buffer diffing, gathering,
+mapping-table updates).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, prefill, score
+from .kernels.ref import NEG_INF
+from .specs import LAYER_TENSORS, ModelSpec
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+
+def rmsnorm(x, g, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x, pos, base):
+    """Rotary position embedding.
+
+    x:   [..., H, d] with d even
+    pos: broadcastable to x[..., 0, 0] — absolute token positions (i32)
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(h, wg, wu, wd):
+    return (jax.nn.silu(h @ wg) * (h @ wu)) @ wd
+
+
+def _layer_args(weights_prefix: str = "") -> List[str]:
+    return [weights_prefix + t for t in LAYER_TENSORS]
+
+
+# ---------------------------------------------------------------------------
+# decode path artifacts
+
+
+def embed_fn(spec: ModelSpec):
+    """tokens [b] i32, emb [V, D] -> x [b, D]"""
+
+    def f(tokens, emb):
+        return (jnp.take(emb, tokens, axis=0),)
+
+    return f
+
+
+def decode_block_fn(spec: ModelSpec):
+    """One transformer block for a single decode step over gathered KV.
+
+    Inputs:
+      x      [b, D]           block input activations
+      k_sel  [b, Hkv, P, d]   gathered selected keys (post-RoPE)
+      v_sel  [b, Hkv, P, d]
+      mask   [b, P]           additive validity mask for the P slots
+      pos    [b] i32          absolute position of the current token
+      ln1, wq, wk, wv, wo, ln2, wg, wu, wd : layer weights
+    Outputs:
+      x_next [b, D], k_new [b, Hkv, d] (post-RoPE), v_new [b, Hkv, d]
+
+    The current token's K/V are computed here and appended as slot P
+    (self-attention is always valid), so the kernel sees width P+1.
+    """
+
+    def f(x, k_sel, v_sel, mask, pos, ln1, wq, wk, wv, wo, ln2, wg, wu, wd):
+        b = x.shape[0]
+        hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+        h = rmsnorm(x, ln1, spec.rms_eps)
+        q = (h @ wq).reshape(b, hq, d)
+        k_new = (h @ wk).reshape(b, hkv, d)
+        v_new = (h @ wv).reshape(b, hkv, d)
+        q = rope(q, pos, spec.rope_base)
+        k_new = rope(k_new, pos, spec.rope_base)
+        k_full = jnp.concatenate([k_sel, k_new[:, :, None, :]], axis=2)
+        v_full = jnp.concatenate([v_sel, v_new[:, :, None, :]], axis=2)
+        mask_full = jnp.concatenate(
+            [mask, jnp.zeros((b, 1), dtype=mask.dtype)], axis=1
+        )
+        o = attention.gathered_attention(q, k_full, v_full, mask_full)
+        x = x + o.reshape(b, hq * d) @ wo
+        h2 = rmsnorm(x, ln2, spec.rms_eps)
+        x = x + swiglu(h2, wg, wu, wd)
+        return x, k_new, v_new
+
+    return f
+
+
+def predict_scores_fn(spec: ModelSpec):
+    """Grouped-critical-KV predictor input math + token-score kernel.
+
+    Approximates *next* layer i's attention scores from layer i-1's input
+    x (paper §3.3 "online prediction": X_i ≈ X_{i-1}), using layer i's
+    query projection and the per-layer low-rank adapter A.
+
+    Inputs:
+      x       [b, D]          input of layer i-1 (≈ input of layer i)
+      k_lr    [b, N, r]       compressed K cache rows for layer i
+      lens    [b] i32         valid rows in k_lr
+      pos     [b] i32         current decode position (for RoPE on q̂)
+      ln1_n   [D]             layer i's pre-attention norm
+      wq_n    [D, Hq*d]       layer i's query projection
+      a       [Hkv*d, r]      layer i's low-rank adapter
+    Output:
+      tscores [b, N]          head-summed token scores (NEG_INF at invalid)
+    """
+
+    def f(x, k_lr, lens, pos, ln1_n, wq_n, a):
+        b = x.shape[0]
+        hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+        r = a.shape[1]
+        h = rmsnorm(x, ln1_n, spec.rms_eps)
+        q = (h @ wq_n).reshape(b, hq, d)
+        q = rope(q, pos, spec.rope_base)
+        # Eq. (1): q_lr[h] = Q_h A_{g(h)}; A_{g(h)} is the d-row slice of A
+        # owned by query head h's shared KV head g(h).
+        a_heads = a.reshape(hkv, d, r)
+        qg = q.reshape(b, hkv, spec.n_rep, d)
+        q_lr = jnp.einsum("bhrd,hdk->bhrk", qg, a_heads).reshape(b, hq, r)
+        tok = score.token_scores(q_lr, k_lr, lens)
+        return (tok,)
+
+    return f
+
+
+def grouped_predict_fn(spec: ModelSpec, group: int):
+    """Fused variant: same as predict_scores_fn but returns group maxima."""
+
+    def f(x, k_lr, lens, pos, ln1_n, wq_n, a):
+        b = x.shape[0]
+        hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+        r = a.shape[1]
+        h = rmsnorm(x, ln1_n, spec.rms_eps)
+        q = (h @ wq_n).reshape(b, hq, d)
+        q = rope(q, pos, spec.rope_base)
+        a_heads = a.reshape(hkv, d, r)
+        qg = q.reshape(b, hkv, spec.n_rep, d)
+        q_lr = jnp.einsum("bhrd,hdk->bhrk", qg, a_heads).reshape(b, hq, r)
+        g = score.grouped_scores(q_lr, k_lr, lens, group)
+        return (g,)
+
+    return f
+
+
+def logits_argmax_fn(spec: ModelSpec):
+    """x [b, D], fln [D], emb [V, D] -> (next_token [b] i32, top_logit [b])"""
+
+    def f(x, fln, emb):
+        h = rmsnorm(x, fln, spec.rms_eps)
+        logits = h @ emb.T
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        top = jnp.max(logits, axis=-1)
+        return tok, top
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# prefill path artifacts
+
+
+def embed_chunk_fn(spec: ModelSpec):
+    """tokens [b, T] i32, emb [V, D] -> x [b, T, D]"""
+
+    def f(tokens, emb):
+        return (jnp.take(emb, tokens, axis=0),)
+
+    return f
+
+
+def prefill_block_fn(spec: ModelSpec):
+    """One transformer block over a prefill chunk.
+
+    Inputs:
+      x        [b, T, D]
+      k_cache  [b, Hkv, S, d]  keys for positions < start (post-RoPE);
+                               rows >= start are ignored/overwritten
+      v_cache  [b, Hkv, S, d]
+      start    [b] i32         absolute position of chunk token 0
+      layer weights as in decode_block_fn
+    Outputs:
+      x_next [b, T, D], k_chunk [b, Hkv, T, d], v_chunk [b, Hkv, T, d]
+
+    The chunk's keys are written into the cache (dynamic-update-slice)
+    before the kernel runs, so in-chunk causal attention is exact.
+    """
+
+    def f(x, k_cache, v_cache, start, ln1, wq, wk, wv, wo, ln2, wg, wu, wd):
+        b, t, _ = x.shape
+        hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+        h = rmsnorm(x, ln1, spec.rms_eps)
+        q = (h @ wq).reshape(b, t, hq, d)
+        k_chunk = (h @ wk).reshape(b, t, hkv, d)
+        v_chunk = (h @ wv).reshape(b, t, hkv, d)
+        pos = start[:, None] + jnp.arange(t)[None, :]  # [b, T]
+        q = rope(q, pos, spec.rope_base)
+        k_chunk = rope(k_chunk, pos, spec.rope_base)
+        k_chunk = k_chunk.transpose(0, 2, 1, 3)  # [b, Hkv, T, d]
+        v_chunk = v_chunk.transpose(0, 2, 1, 3)
+
+        def write(cache, chunk, s0):
+            return jax.lax.dynamic_update_slice(
+                cache, chunk, (0, s0, 0)
+            )
+
+        # Per-batch dynamic start: vmap the DUS over the batch axis.
+        k_full = jax.vmap(write)(k_cache, k_chunk, start)
+        v_full = jax.vmap(write)(v_cache, v_chunk, start)
+        o = prefill.prefill_attention(q, k_full, v_full, start)
+        x = x + o.reshape(b, t, hq * d) @ wo
+        h2 = rmsnorm(x, ln2, spec.rms_eps)
+        x = x + swiglu(h2, wg, wu, wd)
+        return x, k_chunk, v_chunk
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# whole-model reference (used by tests and calibration, never exported)
+
+
+def reference_decode_step(
+    spec: ModelSpec,
+    weights: Dict[str, jnp.ndarray],
+    x0,
+    k_cache,
+    v_cache,
+    lens,
+    pos,
+):
+    """Full-KV oracle decode step in pure jnp (no Pallas).
+
+    x0 [b, D]; k_cache/v_cache [L][b, Hkv, S, d]; lens [b] i32; pos [b] i32.
+    Returns (x_final [b, D], k_new [L][b, Hkv, d], v_new [L][b, Hkv, d]).
+    """
+    from .kernels.ref import gathered_attention_ref
+
+    b = x0.shape[0]
+    hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+    s_len = k_cache[0].shape[2]
+    idx = jnp.arange(s_len)[None, :]
+    # Current token occupies the slot at `lens` implicitly via concat below.
+    mask = jnp.where(idx < lens[:, None], 0.0, NEG_INF).astype(jnp.float32)
+    x = x0
+    k_news, v_news = [], []
+    for i in range(spec.n_layers):
+        w = {t: weights[f"layer{i}.{t}"] for t in LAYER_TENSORS}
+        h = rmsnorm(x, w["ln1"], spec.rms_eps)
+        q = rope((h @ w["wq"]).reshape(b, hq, d), pos, spec.rope_base)
+        k_new = rope((h @ w["wk"]).reshape(b, hkv, d), pos, spec.rope_base)
+        v_new = (h @ w["wv"]).reshape(b, hkv, d)
+        k_full = jnp.concatenate([k_cache[i], k_new[:, :, None, :]], axis=2)
+        v_full = jnp.concatenate([v_cache[i], v_new[:, :, None, :]], axis=2)
+        m = jnp.concatenate([mask, jnp.zeros((b, 1), jnp.float32)], axis=1)
+        o = gathered_attention_ref(q, k_full, v_full, m, 1.0 / d**0.5)
+        x = x + o.reshape(b, hq * d) @ w["wo"]
+        h2 = rmsnorm(x, w["ln2"], spec.rms_eps)
+        x = x + swiglu(h2, w["wg"], w["wu"], w["wd"])
+        k_news.append(k_new)
+        v_news.append(v_new)
+    return x, k_news, v_news
+
+
+def reference_prefill(spec: ModelSpec, weights, tokens):
+    """Full prefill in pure jnp. tokens [b, S] -> (x [b, S, D], K, V lists).
+
+    K/V lists: per-layer [b, Hkv, S, d] post-RoPE caches.
+    """
+    from .kernels.ref import prefill_attention_ref
+
+    b, s_len = tokens.shape
+    hq, hkv, d = spec.n_q_heads, spec.n_kv_heads, spec.head_dim
+    x = jnp.take(weights["emb"], tokens, axis=0)
+    pos = jnp.broadcast_to(jnp.arange(s_len)[None, :], (b, s_len))
+    start = jnp.zeros((b,), jnp.int32)
+    ks, vs = [], []
+    for i in range(spec.n_layers):
+        w = {t: weights[f"layer{i}.{t}"] for t in LAYER_TENSORS}
+        h = rmsnorm(x, w["ln1"], spec.rms_eps)
+        q = rope((h @ w["wq"]).reshape(b, s_len, hq, d), pos, spec.rope_base)
+        k = rope((h @ w["wk"]).reshape(b, s_len, hkv, d), pos, spec.rope_base)
+        v = (h @ w["wv"]).reshape(b, s_len, hkv, d)
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        o = prefill_attention_ref(q, k, v, start, 1.0 / d**0.5)
+        x = x + o.reshape(b, s_len, hq * d) @ w["wo"]
+        h2 = rmsnorm(x, w["ln2"], spec.rms_eps)
+        x = x + swiglu(h2, w["wg"], w["wu"], w["wd"])
+        ks.append(k)
+        vs.append(v)
+    return x, ks, vs

@@ -1,0 +1,232 @@
+"""Model specifications and weight initialization for the KVSwap stack.
+
+The paper evaluates LLaMA3-3B/8B and Qwen3-4/8/14B class GQA models on a
+Jetson Orin. Those are not runnable here (no network, CPU-only PJRT with
+interpret-mode Pallas), so we define a family of small GQA transformers
+with the *same dataflow* (GQA attention, per-layer KV cache, RoPE, SwiGLU
+MLP, RMSNorm, tied LM head) at sizes where the whole three-layer stack is
+tractable. DESIGN.md documents the substitution and the size mapping used
+by the benchmark harness (`nano`→"3B", `small`→"8B", `med`→"14B").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# f32 everywhere: CPU PJRT path; keeps the Rust Literal plumbing simple.
+DTYPE = np.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static shape/config description of a GQA transformer."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_q_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_base: float = 10000.0
+    rms_eps: float = 1e-5
+    # Init gain on Wq/Wk. Random-init transformers produce near-uniform
+    # attention; the paper's premise (a small fraction of tokens dominate
+    # attention mass) needs spiky score distributions, so we raise the
+    # query/key init scale until top-5% tokens carry most of the mass.
+    # test_model.py asserts the resulting concentration is in range.
+    attn_gain: float = 4.0
+    # Spectral decay of Wk within each head's dim pairs. Trained LLMs have
+    # sharply decaying K-cache spectra — the empirical fact ShadowKV and
+    # KVSwap's low-rank compression rely on (paper §3.2). A random Wk
+    # yields a *flat* spectrum that no low-rank predictor can compress, so
+    # we bake the decay in: RoPE-pair p of every head is scaled by
+    # exp(-p / k_decay). DESIGN.md §2 documents the substitution.
+    k_decay: float = 2.5
+    # Heavy-tailed token-embedding norms (lognormal sigma). Trained LLMs
+    # have persistent heavy-hitter / sink tokens attended at every step -
+    # the temporal locality that makes the paper's reuse buffer pay off
+    # (S3.4.2, Fig. 8: ~77% step-to-step overlap). Uniform random
+    # embeddings have none, so we give a heavy tail to embedding norms.
+    emb_tail: float = 0.5
+
+    @property
+    def kv_flat_dim(self) -> int:
+        """H_kv * d — the flattened joint-head K dimension (paper §3.2)."""
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def q_flat_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def n_rep(self) -> int:
+        """Query heads per KV head (GQA replication factor)."""
+        assert self.n_q_heads % self.n_kv_heads == 0
+        return self.n_q_heads // self.n_kv_heads
+
+    def kv_bytes_per_token_layer(self) -> int:
+        """K+V bytes for one token in one layer (f32)."""
+        return 2 * self.kv_flat_dim * 4
+
+    def kv_bytes_per_token(self) -> int:
+        return self.n_layers * self.kv_bytes_per_token_layer()
+
+    def n_params(self) -> int:
+        d, hq, hkv = self.d_model, self.q_flat_dim, self.kv_flat_dim
+        per_layer = (
+            d  # ln1
+            + d * hq  # wq
+            + 2 * d * hkv  # wk, wv
+            + hq * d  # wo
+            + d  # ln2
+            + 2 * d * self.d_ff  # wg, wu
+            + self.d_ff * d  # wd
+        )
+        return self.n_layers * per_layer + self.vocab * d + d  # + emb + fln
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# Preset family. head_dim/kv dims chosen so H_kv*d = 128 everywhere: the
+# paper's compression-ratio axis sigma = (H_kv*d)/r then spans r in
+# {32,16,8,4} for sigma in {4,8,16,32} — matching its sigma_max = 32.
+PRESETS: Dict[str, ModelSpec] = {
+    "nano": ModelSpec(
+        name="nano", n_layers=4, d_model=128, n_q_heads=8, n_kv_heads=4,
+        head_dim=32, d_ff=256, vocab=512,
+    ),
+    "small": ModelSpec(
+        name="small", n_layers=8, d_model=256, n_q_heads=16, n_kv_heads=4,
+        head_dim=32, d_ff=512, vocab=1024,
+    ),
+    "med": ModelSpec(
+        name="med", n_layers=12, d_model=384, n_q_heads=12, n_kv_heads=4,
+        head_dim=32, d_ff=768, vocab=1024,
+    ),
+}
+
+
+# Per-layer weight tensor names, in the canonical serialization order the
+# Rust runtime (runtime/artifacts.rs) relies on.
+LAYER_TENSORS: List[str] = [
+    "ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd",
+]
+
+
+def layer_shapes(spec: ModelSpec) -> Dict[str, Tuple[int, ...]]:
+    d, f = spec.d_model, spec.d_ff
+    return {
+        "ln1": (d,),
+        "wq": (d, spec.q_flat_dim),
+        "wk": (d, spec.kv_flat_dim),
+        "wv": (d, spec.kv_flat_dim),
+        "wo": (spec.q_flat_dim, d),
+        "ln2": (d,),
+        "wg": (d, f),
+        "wu": (d, f),
+        "wd": (f, d),
+    }
+
+
+def global_shapes(spec: ModelSpec) -> Dict[str, Tuple[int, ...]]:
+    return {
+        "emb": (spec.vocab, spec.d_model),
+        "fln": (spec.d_model,),
+    }
+
+
+def init_weights(spec: ModelSpec, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic random init. Keys: 'emb', 'fln', 'layer{i}.{tensor}'."""
+    rng = np.random.default_rng(seed)
+    w: Dict[str, np.ndarray] = {}
+
+    def normal(shape, std):
+        return rng.normal(0.0, std, size=shape).astype(DTYPE)
+
+    d = spec.d_model
+    emb = normal(global_shapes(spec)["emb"], 1.0 / np.sqrt(d))
+    # heavy-tailed per-token norm scaling (persistent heavy hitters)
+    scale = np.exp(rng.normal(0.0, spec.emb_tail, size=(spec.vocab, 1))).astype(DTYPE)
+    w["emb"] = emb * scale
+    w["fln"] = np.ones((d,), dtype=DTYPE)
+    shapes = layer_shapes(spec)
+    base = 1.0 / np.sqrt(d)
+    qk_std = base * np.sqrt(spec.attn_gain)
+    for i in range(spec.n_layers):
+        for t in LAYER_TENSORS:
+            shape = shapes[t]
+            if t in ("ln1", "ln2"):
+                w[f"layer{i}.{t}"] = np.ones(shape, dtype=DTYPE)
+            elif t == "wq":
+                w[f"layer{i}.{t}"] = normal(shape, qk_std)
+            elif t == "wk":
+                wk = normal(shape, qk_std)
+                # per-head, RoPE-pair-consistent spectral decay: pair p of
+                # head h spans columns (h*hd + p) and (h*hd + p + hd/2);
+                # both get the same factor so rotations preserve the
+                # subspace.
+                hd = spec.head_dim
+                half = hd // 2
+                decay = np.exp(-np.arange(half) / spec.k_decay).astype(DTYPE)
+                for h in range(spec.n_kv_heads):
+                    wk[:, h * hd : h * hd + half] *= decay
+                    wk[:, h * hd + half : (h + 1) * hd] *= decay
+                w[f"layer{i}.{t}"] = wk
+            elif t == "wd":
+                # Scale residual-writing projections down with depth.
+                w[f"layer{i}.{t}"] = normal(shape, base / np.sqrt(2 * spec.n_layers))
+            elif t == "wo":
+                w[f"layer{i}.{t}"] = normal(shape, base / np.sqrt(2 * spec.n_layers))
+            else:
+                w[f"layer{i}.{t}"] = normal(shape, base)
+    return w
+
+
+def serialize_weights(
+    weights: Dict[str, np.ndarray],
+) -> Tuple[bytes, List[dict]]:
+    """Pack weights into a raw little-endian f32 blob + index entries."""
+    blob = bytearray()
+    index: List[dict] = []
+    for name in sorted(weights.keys()):
+        arr = np.ascontiguousarray(weights[name], dtype=DTYPE)
+        index.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": len(blob),
+                "nbytes": arr.nbytes,
+            }
+        )
+        blob.extend(arr.tobytes())
+    return bytes(blob), index
+
+
+def deserialize_weights(blob: bytes, index: List[dict]) -> Dict[str, np.ndarray]:
+    out = {}
+    for ent in index:
+        start = ent["offset"]
+        arr = np.frombuffer(blob, dtype=DTYPE, count=ent["nbytes"] // 4, offset=start)
+        out[ent["name"]] = arr.reshape(ent["shape"]).copy()
+    return out
+
+
+def spec_from_json(d: dict) -> ModelSpec:
+    return ModelSpec(**{k.name: d[k.name] for k in dataclasses.fields(ModelSpec)})
+
+
+if __name__ == "__main__":
+    for name, spec in PRESETS.items():
+        print(
+            f"{name}: params={spec.n_params()/1e6:.2f}M "
+            f"kv_bytes/token={spec.kv_bytes_per_token()} "
+            f"kv@8k,b8={8 * 8192 * spec.kv_bytes_per_token() / 2**20:.0f} MiB"
+        )
+    print(json.dumps(PRESETS["nano"].to_json(), indent=1))

@@ -1,0 +1,138 @@
+"""AOT pipeline: manifest/weights round-trip, HLO-text sanity, calibration."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, calibrate, model
+from compile.specs import (
+    PRESETS,
+    deserialize_weights,
+    init_weights,
+    layer_shapes,
+    serialize_weights,
+    spec_from_json,
+)
+
+SPEC = PRESETS["nano"]
+
+
+def test_weights_serialize_roundtrip():
+    w = init_weights(SPEC, seed=3)
+    blob, index = serialize_weights(w)
+    back = deserialize_weights(blob, index)
+    assert set(back) == set(w)
+    for k in w:
+        assert_allclose(back[k], w[k])
+
+
+def test_weight_index_offsets_are_contiguous():
+    w = init_weights(SPEC, seed=0)
+    blob, index = serialize_weights(w)
+    off = 0
+    for ent in index:
+        assert ent["offset"] == off
+        assert ent["nbytes"] == int(np.prod(ent["shape"])) * 4
+        off += ent["nbytes"]
+    assert off == len(blob)
+
+
+def test_spec_json_roundtrip():
+    d = SPEC.to_json()
+    assert spec_from_json(json.loads(json.dumps(d))) == SPEC
+
+
+def test_init_weights_deterministic():
+    a = init_weights(SPEC, seed=7)
+    b = init_weights(SPEC, seed=7)
+    for k in a:
+        assert_allclose(a[k], b[k])
+    c = init_weights(SPEC, seed=8)
+    assert not np.allclose(a["layer0.wq"], c["layer0.wq"])
+
+
+def test_layer_shapes_consistent_with_param_count():
+    total = sum(int(np.prod(s)) for s in layer_shapes(SPEC).values())
+    total *= SPEC.n_layers
+    total += SPEC.vocab * SPEC.d_model + SPEC.d_model
+    assert total == SPEC.n_params()
+
+
+def test_to_hlo_text_emits_parseable_hlo():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    text = aot.to_hlo_text(
+        fn, [jax.ShapeDtypeStruct((4, 4), jnp.float32)] * 2
+    )
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # per the xla 0.1.6 interchange contract, output must be a tuple
+    assert "tuple" in text.lower()
+
+
+def test_svd_adapter_orthonormal_columns():
+    rng = np.random.default_rng(0)
+    k_flat = rng.normal(size=(500, 64)).astype(np.float32)
+    a = calibrate.svd_adapter(k_flat, 16)
+    assert a.shape == (64, 16)
+    gram = a.T @ a
+    assert_allclose(gram, np.eye(16), atol=1e-4)
+
+
+def test_svd_adapter_reconstruction_improves_with_rank():
+    rng = np.random.default_rng(1)
+    # low-rank-ish matrix + noise
+    base = rng.normal(size=(400, 8)) @ rng.normal(size=(8, 64))
+    k_flat = (base + 0.1 * rng.normal(size=(400, 64))).astype(np.float32)
+    errs = [
+        calibrate.reconstruction_error(k_flat, calibrate.svd_adapter(k_flat, r))
+        for r in (2, 8, 32)
+    ]
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[1] < 0.2  # rank 8 captures the rank-8 structure
+
+
+def test_collect_calibration_k_shapes():
+    w = init_weights(SPEC, seed=0)
+    ks = calibrate.collect_calibration_k(
+        SPEC, w, n_batches=1, batch=1, seq=32, seed=5
+    )
+    assert len(ks) == SPEC.n_layers
+    for k in ks:
+        assert k.shape == (32, SPEC.kv_flat_dim)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_is_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert "nano" in man["presets"]
+    for ent in man["artifacts"]:
+        path = os.path.join(root, ent["path"])
+        assert os.path.exists(path), ent["path"]
+        assert ent["n_outputs"] >= 1
+        assert len(ent["inputs"]) >= 1
+    # weights blob covers every tensor in its index
+    for pname, stanza in man["presets"].items():
+        wpath = os.path.join(root, stanza["weights"]["path"])
+        size = os.path.getsize(wpath)
+        for t in stanza["weights"]["tensors"]:
+            assert t["offset"] + t["nbytes"] <= size
+        names = {t["name"] for t in stanza["weights"]["tensors"]}
+        spec = spec_from_json(stanza["model"])
+        assert "emb" in names and "fln" in names
+        for i in range(spec.n_layers):
+            assert f"layer{i}.wq" in names
+            for r in stanza["ranks"]:
+                assert f"layer{i}.A{r}" in names

@@ -1,0 +1,245 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch, heads, selection width, rank, group size)
+and mask/length patterns; assert_allclose against ref.py is the core
+correctness signal for the kernels the AOT artifacts embed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention, prefill, ref, score
+
+SET = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def rnd(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# gathered attention
+
+
+@SET
+@given(
+    b=st.integers(1, 4),
+    hkv=st.sampled_from([1, 2, 4]),
+    n_rep=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    p=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gathered_attention_matches_ref(b, hkv, n_rep, d, p, seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * n_rep
+    q = rnd(rng, (b, hq, d))
+    k = rnd(rng, (b, hkv, p, d))
+    v = rnd(rng, (b, hkv, p, d))
+    keep = rng.random((b, p)) < 0.7
+    keep[:, 0] = True  # at least one valid slot per row
+    mask = jnp.asarray(np.where(keep, 0.0, ref.NEG_INF).astype(np.float32))
+    got = attention.gathered_attention(q, k, v, mask)
+    want = ref.gathered_attention_ref(q, k, v, mask, 1.0 / d**0.5)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_gathered_attention_masked_slots_have_no_influence():
+    rng = np.random.default_rng(0)
+    b, hq, hkv, d, p = 2, 8, 4, 16, 24
+    q = rnd(rng, (b, hq, d))
+    k = rnd(rng, (b, hkv, p, d))
+    v = rnd(rng, (b, hkv, p, d))
+    mask_np = np.zeros((b, p), np.float32)
+    mask_np[:, p // 2 :] = ref.NEG_INF
+    out1 = attention.gathered_attention(q, k, v, jnp.asarray(mask_np))
+    # Scrambling the masked-out K/V must not change the output.
+    k2 = np.asarray(k).copy()
+    v2 = np.asarray(v).copy()
+    k2[:, :, p // 2 :, :] = rng.normal(size=k2[:, :, p // 2 :, :].shape)
+    v2[:, :, p // 2 :, :] = 1e3
+    out2 = attention.gathered_attention(
+        q, jnp.asarray(k2), jnp.asarray(v2), jnp.asarray(mask_np)
+    )
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_gathered_attention_single_valid_slot_returns_its_value():
+    rng = np.random.default_rng(1)
+    b, hq, hkv, d, p = 1, 4, 2, 8, 16
+    q = rnd(rng, (b, hq, d))
+    k = rnd(rng, (b, hkv, p, d))
+    v = rnd(rng, (b, hkv, p, d))
+    mask_np = np.full((b, p), ref.NEG_INF, np.float32)
+    mask_np[:, 3] = 0.0
+    out = attention.gathered_attention(q, k, v, jnp.asarray(mask_np))
+    out = np.asarray(out).reshape(b, hkv, hq // hkv, d)
+    for h in range(hkv):
+        for r in range(hq // hkv):
+            assert_allclose(
+                out[0, h, r], np.asarray(v)[0, h, 3], rtol=1e-5, atol=1e-5
+            )
+
+
+def test_gathered_attention_gqa_head_mapping():
+    """Query head h must read KV head h // n_rep: make KV heads disjoint."""
+    rng = np.random.default_rng(2)
+    b, hkv, n_rep, d, p = 1, 4, 2, 8, 8
+    hq = hkv * n_rep
+    q = rnd(rng, (b, hq, d))
+    k = rnd(rng, (b, hkv, p, d))
+    # v for kv-head j is constant j
+    v = jnp.asarray(
+        np.broadcast_to(
+            np.arange(hkv, dtype=np.float32)[None, :, None, None], (b, hkv, p, d)
+        ).copy()
+    )
+    mask = jnp.zeros((b, p), jnp.float32)
+    out = np.asarray(attention.gathered_attention(q, k, v, mask))
+    for h in range(hq):
+        assert_allclose(out[0, h], np.full(d, h // n_rep, np.float32), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# low-rank scores
+
+
+@SET
+@given(
+    b=st.integers(1, 4),
+    hq=st.sampled_from([4, 8, 16]),
+    r=st.sampled_from([4, 8, 16, 32]),
+    n=st.sampled_from([32, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_token_scores_matches_ref(b, hq, r, n, seed):
+    rng = np.random.default_rng(seed)
+    q_lr = rnd(rng, (b, hq, r))
+    k_lr = rnd(rng, (b, n, r))
+    lens = jnp.asarray(rng.integers(1, n + 1, size=(b,)), jnp.int32)
+    got = score.token_scores(q_lr, k_lr, lens)
+    want = ref.token_scores_ref(q_lr, k_lr, lens)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@SET
+@given(
+    b=st.integers(1, 3),
+    g=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grouped_scores_matches_ref(b, g, seed):
+    rng = np.random.default_rng(seed)
+    hq, r, n = 8, 8, 128
+    q_lr = rnd(rng, (b, hq, r))
+    k_lr = rnd(rng, (b, n, r))
+    lens = jnp.asarray(rng.integers(1, n + 1, size=(b,)), jnp.int32)
+    got = score.grouped_scores(q_lr, k_lr, lens, g)
+    want = ref.grouped_scores_ref(q_lr, k_lr, lens, g)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_token_scores_invalid_rows_are_neg_inf():
+    rng = np.random.default_rng(3)
+    b, hq, r, n = 2, 4, 8, 32
+    q_lr = rnd(rng, (b, hq, r))
+    k_lr = rnd(rng, (b, n, r))
+    lens = jnp.asarray([5, 20], jnp.int32)
+    out = np.asarray(score.token_scores(q_lr, k_lr, lens))
+    assert (out[0, 5:] == ref.NEG_INF).all()
+    assert (out[1, 20:] == ref.NEG_INF).all()
+    assert (out[0, :5] > ref.NEG_INF).all()
+
+
+def test_grouped_scores_is_max_over_group_members():
+    rng = np.random.default_rng(4)
+    b, hq, r, n, g = 1, 4, 8, 64, 8
+    q_lr = rnd(rng, (b, hq, r))
+    k_lr = rnd(rng, (b, n, r))
+    lens = jnp.asarray([n], jnp.int32)
+    tok = np.asarray(score.token_scores(q_lr, k_lr, lens))
+    grp = np.asarray(score.grouped_scores(q_lr, k_lr, lens, g))
+    assert_allclose(grp[0], tok[0].reshape(-1, g).max(axis=1), rtol=1e-6)
+
+
+def test_token_scores_equals_true_lowrank_attention_logits():
+    """Eq. (1): head-sum of Q_h A_g K_lr^T == head-sum of (Q A) reconstruction."""
+    rng = np.random.default_rng(5)
+    b, hkv, n_rep, d, r, n = 1, 2, 2, 16, 8, 32
+    hq = hkv * n_rep
+    a = rng.normal(size=(hkv * d, r)).astype(np.float32)
+    k_flat = rng.normal(size=(n, hkv * d)).astype(np.float32)
+    k_lr = k_flat @ a  # [n, r]
+    q = rng.normal(size=(b, hq, d)).astype(np.float32)
+    a_heads = a.reshape(hkv, d, r)
+    q_lr = np.einsum(
+        "bhrd,hdk->bhrk", q.reshape(b, hkv, n_rep, d), a_heads
+    ).reshape(b, hq, r)
+    lens = jnp.asarray([n], jnp.int32)
+    got = np.asarray(score.token_scores(jnp.asarray(q_lr), jnp.asarray(k_lr[None]), lens))
+    # direct: sum_h q_h . (A_g^T k_flat_n) per token
+    want = np.zeros((b, n), np.float32)
+    for h in range(hq):
+        g = h // n_rep
+        k_rec = k_lr @ a_heads[g].T  # [n, d] reconstructed head-g keys
+        want[0] += k_rec @ q[0, h]
+    assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+
+
+@SET
+@given(
+    b=st.integers(1, 3),
+    t=st.sampled_from([1, 4, 8]),
+    s_len=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_attention_matches_ref(b, t, s_len, seed):
+    rng = np.random.default_rng(seed)
+    hq, hkv, d = 8, 4, 16
+    q = rnd(rng, (b, t, hq, d))
+    k = rnd(rng, (b, hkv, s_len, d))
+    v = rnd(rng, (b, hkv, s_len, d))
+    start = jnp.asarray(rng.integers(0, s_len - t + 1, size=(b,)), jnp.int32)
+    got = prefill.prefill_attention(q, k, v, start)
+    want = ref.prefill_attention_ref(q, k, v, start, 1.0 / d**0.5)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_attention_is_causal():
+    """Future keys (beyond each query's position) must have no influence."""
+    rng = np.random.default_rng(6)
+    b, t, hq, hkv, d, s_len = 1, 4, 4, 2, 8, 32
+    q = rnd(rng, (b, t, hq, d))
+    k = rnd(rng, (b, hkv, s_len, d))
+    v = rnd(rng, (b, hkv, s_len, d))
+    start = jnp.asarray([10], jnp.int32)
+    out1 = prefill.prefill_attention(q, k, v, start)
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    k2[:, :, 14:, :] = 99.0  # beyond last query position (10+3)
+    v2[:, :, 14:, :] = -99.0
+    out2 = prefill.prefill_attention(q, jnp.asarray(k2), jnp.asarray(v2), start)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_first_token_attends_only_to_itself():
+    rng = np.random.default_rng(7)
+    b, t, hq, hkv, d, s_len = 1, 2, 2, 1, 8, 16
+    q = rnd(rng, (b, t, hq, d))
+    k = rnd(rng, (b, hkv, s_len, d))
+    v = rnd(rng, (b, hkv, s_len, d))
+    start = jnp.asarray([0], jnp.int32)
+    out = np.asarray(prefill.prefill_attention(q, k, v, start))
+    for h in range(hq):
+        assert_allclose(out[0, 0, h], np.asarray(v)[0, 0, 0], rtol=1e-5, atol=1e-5)

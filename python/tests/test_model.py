@@ -1,0 +1,262 @@
+"""L2 correctness: decode/prefill blocks, RoPE, predictor approximation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import NEG_INF
+from compile.specs import LAYER_TENSORS, PRESETS, init_weights
+
+SPEC = PRESETS["nano"]
+W = init_weights(SPEC, seed=0)
+JW = {k: jnp.asarray(v) for k, v in W.items()}
+
+
+def layer_weights(i):
+    return [JW[f"layer{i}.{t}"] for t in LAYER_TENSORS]
+
+
+# ---------------------------------------------------------------------------
+# RoPE properties
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 3, 4, 32)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, 1000, size=(2, 3)), jnp.int32)
+    y = model.rope(x, pos, 10000.0)
+    assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_zero_position_is_identity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 2, 32)).astype(np.float32))
+    pos = jnp.zeros((1,), jnp.int32)
+    assert_allclose(np.asarray(model.rope(x, pos, 10000.0)), np.asarray(x), rtol=1e-6)
+
+
+def test_rope_relative_position_invariance():
+    """q·k after RoPE depends only on relative offset (per-pair dims)."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 1, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 32)).astype(np.float32))
+
+    def dot_at(pq, pk):
+        qq = model.rope(q, jnp.asarray([pq], jnp.int32), 10000.0)
+        kk = model.rope(k, jnp.asarray([pk], jnp.int32), 10000.0)
+        return float(jnp.sum(qq * kk))
+
+    assert abs(dot_at(10, 4) - dot_at(106, 100)) < 1e-3
+    assert abs(dot_at(50, 0) - dot_at(150, 100)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# decode block vs full-attention reference
+
+
+def test_decode_block_matches_reference_full_attention():
+    """decode_block over ALL cache entries == reference oracle step."""
+    rng = np.random.default_rng(3)
+    b, s_len = 2, 40
+    hkv, d = SPEC.n_kv_heads, SPEC.head_dim
+    tokens = rng.integers(0, SPEC.vocab, size=(b, s_len))
+    x_all, ks, vs = model.reference_prefill(SPEC, JW, jnp.asarray(tokens))
+
+    x0 = jnp.take(JW["emb"], jnp.asarray(rng.integers(0, SPEC.vocab, size=(b,))), axis=0)
+    lens = jnp.full((b,), s_len, jnp.int32)
+    pos = jnp.full((b,), s_len, jnp.int32)
+    want_x, want_k, want_v = model.reference_decode_step(
+        SPEC, JW, x0, ks, vs, lens, pos
+    )
+
+    # Same step through the exported per-layer decode blocks: the "selected"
+    # set is the entire cache (mask all-valid), so results must agree.
+    x = x0
+    mask = jnp.zeros((b, s_len), jnp.float32)
+    f = model.decode_block_fn(SPEC)
+    for i in range(SPEC.n_layers):
+        x, k_new, v_new = f(x, ks[i], vs[i], mask, pos, *layer_weights(i))
+        assert_allclose(np.asarray(k_new), np.asarray(want_k[i]), rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(v_new), np.asarray(want_v[i]), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(x), np.asarray(want_x), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_block_permutation_invariance():
+    """Attention over gathered KV must not depend on slot order (the KV
+    manager presents selected groups in arbitrary slot order)."""
+    rng = np.random.default_rng(4)
+    b, p = 1, 32
+    hkv, d = SPEC.n_kv_heads, SPEC.head_dim
+    x = jnp.asarray(rng.normal(size=(b, SPEC.d_model)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, p, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, p, d)).astype(np.float32))
+    mask = jnp.zeros((b, p), jnp.float32)
+    pos = jnp.asarray([100], jnp.int32)
+    f = model.decode_block_fn(SPEC)
+    out1 = f(x, k, v, mask, pos, *layer_weights(0))
+    perm = rng.permutation(p)
+    out2 = f(x, k[:, :, perm], v[:, :, perm], mask[:, perm], pos, *layer_weights(0))
+    assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]), rtol=1e-4, atol=1e-5)
+
+
+def test_prefill_block_matches_reference_prefill():
+    rng = np.random.default_rng(5)
+    b, s_len, t = 2, 64, 16
+    hkv, d = SPEC.n_kv_heads, SPEC.head_dim
+    tokens = rng.integers(0, SPEC.vocab, size=(b, s_len))
+    x_want, ks_want, vs_want = model.reference_prefill(SPEC, JW, jnp.asarray(tokens))
+
+    # chunked prefill through prefill_block_fn, chunk size t
+    x = jnp.take(JW["emb"], jnp.asarray(tokens), axis=0)
+    f = model.prefill_block_fn(SPEC)
+    caches_k = [jnp.zeros((b, hkv, s_len, d), jnp.float32) for _ in range(SPEC.n_layers)]
+    caches_v = [jnp.zeros((b, hkv, s_len, d), jnp.float32) for _ in range(SPEC.n_layers)]
+    x_out = np.zeros((b, s_len, SPEC.d_model), np.float32)
+    for c0 in range(0, s_len, t):
+        xc = x[:, c0 : c0 + t]
+        start = jnp.full((b,), c0, jnp.int32)
+        for i in range(SPEC.n_layers):
+            xc, k_chunk, v_chunk = f(
+                xc, caches_k[i], caches_v[i], start, *layer_weights(i)
+            )
+            caches_k[i] = caches_k[i].at[:, :, c0 : c0 + t].set(k_chunk)
+            caches_v[i] = caches_v[i].at[:, :, c0 : c0 + t].set(v_chunk)
+        x_out[:, c0 : c0 + t] = np.asarray(xc)
+
+    for i in range(SPEC.n_layers):
+        assert_allclose(np.asarray(caches_k[i]), np.asarray(ks_want[i]), rtol=1e-3, atol=1e-3)
+    assert_allclose(x_out, np.asarray(x_want), rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# predictor quality (the paper's core mechanism)
+
+
+def _prefill_state(b=2, s_len=256, seed=6):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, SPEC.vocab, size=(b, s_len))
+    return model.reference_prefill(SPEC, JW, jnp.asarray(tokens)), rng
+
+
+def test_attention_mass_is_concentrated():
+    """Paper §2.3 premise: a small fraction of tokens dominates attention.
+    Our init must reproduce that (attn_gain knob)."""
+    (x_all, ks, vs), rng = _prefill_state()
+    b, s_len = x_all.shape[0], ks[0].shape[2]
+    d = SPEC.head_dim
+    # last-token query of layer 1 against the full K cache
+    i = 1
+    h = model.rmsnorm(x_all[:, -1], JW[f"layer{i}.ln1"], SPEC.rms_eps)
+    q = (h @ JW[f"layer{i}.wq"]).reshape(b, SPEC.n_q_heads, d)
+    q = model.rope(q, jnp.full((b,), s_len - 1, jnp.int32), SPEC.rope_base)
+    qg = np.asarray(q).reshape(b, SPEC.n_kv_heads, SPEC.n_rep, d)
+    s = np.einsum("bhrd,bhpd->bhrp", qg, np.asarray(ks[i])) / d**0.5
+    w = np.exp(s - s.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    w = w.reshape(b, -1, s_len).mean(axis=1)  # avg over heads
+    top = np.sort(w, axis=-1)[:, ::-1]
+    frac = top[:, : max(1, s_len // 20)].sum(axis=-1)  # top 5%
+    # >= ~3x the uniform share (0.05): concentrated but not one-hot — the
+    # regime where head-summed score selection works (see DESIGN.md §2).
+    assert frac.mean() > 0.12, f"attention too uniform: top5% mass={frac.mean():.3f}"
+
+
+@pytest.mark.parametrize("rank,min_recall", [(32, 0.35), (16, 0.25), (4, 0.05)])
+def test_predictor_recalls_true_top_tokens(rank, min_recall):
+    """Low-rank predicted scores must recall a decent share of the true
+    top-k attention tokens, degrading with compression (paper Tab. 2)."""
+    from compile import calibrate
+
+    (x_all, ks, vs), rng = _prefill_state()
+    b, s_len = x_all.shape[0], ks[0].shape[2]
+    d = SPEC.head_dim
+    layer = 2
+    k_flat_cal = calibrate.collect_calibration_k(
+        SPEC, W, n_batches=1, batch=2, seq=128, seed=99
+    )[layer]
+    a = calibrate.svd_adapter(k_flat_cal, rank)
+
+    # true scores: x input of layer `layer` is unavailable from
+    # reference_prefill (it returns final x); use the same approximation the
+    # runtime uses (x from the *previous* layer ≈ x of this layer) — here we
+    # only check selection recall, for which the oracle is the true attention
+    # over this layer's K with the approximate q.
+    h = model.rmsnorm(x_all[:, -1], JW[f"layer{layer}.ln1"], SPEC.rms_eps)
+    q = (h @ JW[f"layer{layer}.wq"]).reshape(b, SPEC.n_q_heads, d)
+    q = model.rope(q, jnp.full((b,), s_len - 1, jnp.int32), SPEC.rope_base)
+    qn = np.asarray(q)
+    k_tok = np.asarray(ks[layer]).transpose(0, 2, 1, 3).reshape(b, s_len, -1)
+    true = np.zeros((b, s_len), np.float32)
+    for h_i in range(SPEC.n_q_heads):
+        g = h_i // SPEC.n_rep
+        true += np.einsum(
+            "bnd,bd->bn", k_tok[:, :, g * d : (g + 1) * d], qn[:, h_i]
+        )
+    # predicted via compressed cache
+    k_lr = k_tok @ a
+    a_heads = a.reshape(SPEC.n_kv_heads, d, rank)
+    q_lr = np.einsum(
+        "bhrd,hdk->bhrk",
+        qn.reshape(b, SPEC.n_kv_heads, SPEC.n_rep, d),
+        a_heads,
+    ).reshape(b, SPEC.n_q_heads, rank)
+    pred = np.einsum("bhr,bnr->bn", q_lr, k_lr)
+
+    k_top = 32
+    recall = 0.0
+    for bi in range(b):
+        t_idx = set(np.argsort(true[bi])[::-1][:k_top].tolist())
+        p_idx = set(np.argsort(pred[bi])[::-1][:k_top].tolist())
+        recall += len(t_idx & p_idx) / k_top
+    recall /= b
+    assert recall >= min_recall, f"rank={rank}: recall {recall:.2f} < {min_recall}"
+
+
+def test_predictor_monotone_in_rank():
+    """Higher rank ⇒ better (or equal) approximation of true scores."""
+    from compile import calibrate
+
+    (x_all, ks, vs), _ = _prefill_state(seed=8)
+    layer, b = 1, x_all.shape[0]
+    s_len, d = ks[0].shape[2], SPEC.head_dim
+    k_flat_cal = calibrate.collect_calibration_k(
+        SPEC, W, n_batches=1, batch=2, seq=128, seed=100
+    )[layer]
+    errs = []
+    k_tok = np.asarray(ks[layer]).transpose(0, 2, 1, 3).reshape(b, s_len, -1)
+    for rank in [4, 16, 64, 128]:
+        a = calibrate.svd_adapter(k_flat_cal, rank)
+        rec = (k_tok @ a) @ a.T
+        errs.append(np.linalg.norm(rec - k_tok) / np.linalg.norm(k_tok))
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+    # Random-init K has a flat spectrum (unlike trained models), so the
+    # absolute error at r=64 stays sizeable; full rank must be ~exact.
+    assert errs[3] < 0.05
+
+
+# ---------------------------------------------------------------------------
+# logits / embed
+
+
+def test_embed_then_logits_roundtrip_prefers_same_token():
+    """With tied embeddings and no transformer in between, argmax of the
+    LM head over an embedded token should often be the token itself.
+    Embedding norms are heavy-tailed (persistent heavy hitters, see
+    specs.py), which biases the tied-head argmax toward large-norm
+    tokens — so assert the roundtrip on the top-norm quartile, where the
+    self-alignment dominates."""
+    f_e = model.embed_fn(SPEC)
+    f_l = model.logits_argmax_fn(SPEC)
+    norms = np.linalg.norm(W["emb"], axis=1)
+    top = np.argsort(norms)[::-1][: SPEC.vocab // 4][:64].copy()
+    tokens = jnp.asarray(top, jnp.int32)
+    (x,) = f_e(tokens, JW["emb"])
+    tok, _ = f_l(x * 20.0, JW["fln"], JW["emb"])  # scale to sharpen
+    match = (np.asarray(tok) == np.asarray(tokens)).mean()
+    assert match > 0.8, f"roundtrip match {match:.2f}"

@@ -1,0 +1,93 @@
+//! Fig. 11 — setting B: fixed *total* memory budget; every method runs
+//! its best-case configuration at the largest batch it can fit, and we
+//! report throughput + quality (paper: KVSwap trades ≤2.4% accuracy for
+//! 3.3–8.6× ShadowKV throughput and ~1.1× vLLM with 15.9–39.7× less
+//! memory).
+
+use std::rc::Rc;
+
+use kvswap::baselines::{configure, Budget};
+use kvswap::bench::{banner, engine_cfg, run_throughput, runtime};
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::{EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::Table;
+use kvswap::quality::evaluate_policy;
+use kvswap::util::cli::Args;
+
+/// Per-batch-row management bytes of a method's best-case config.
+fn per_row_bytes(policy: &Policy, kv: &KvSwapConfig, spec: &kvswap::config::ModelSpec, ctx: usize) -> u64 {
+    match policy {
+        Policy::FullMemory => spec.kv_cache_bytes(1, ctx),
+        Policy::ShadowKv { rank, .. } => {
+            // in-memory K_lr at its conservative rank + reuse-ish staging
+            (ctx * rank * 4) as u64 * spec.n_layers as u64 * 2
+        }
+        Policy::InfiniGen { .. } => {
+            // partial-weight ratio 0.5 -> half the K cache resident
+            spec.kv_cache_bytes(1, ctx) / 4
+        }
+        _ => kv.management_bytes_per_seq(spec, ctx),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let context = args.usize_or("context", 2048);
+    let steps = args.usize_or("steps", 6);
+    // our scaled totals standing in for the paper's 2000/800 MiB
+    let totals_mib = [16.0f64, 6.0];
+    banner(
+        "Fig. 11 — best-case configs under a fixed TOTAL memory budget",
+        "each method runs the largest batch its per-row memory allows",
+    );
+    let rt = runtime()?;
+    let spec = rt.manifest.presets["nano"].spec.clone();
+    let batches = rt.manifest.presets["nano"].batches.clone();
+
+    for disk in [DiskProfile::nvme(), DiskProfile::emmc()] {
+        for &total in &totals_mib {
+            let budget = (total * 1024.0 * 1024.0) as u64;
+            let mut t = Table::new(&["method", "b", "mem/row", "tok/s", "fidelity"]);
+            let roster: Vec<Policy> = vec![
+                Policy::Loki,
+                Policy::ShadowKv { chunk: 8, rank: 32 },
+                Policy::KvSwap,
+                Policy::FullMemory,
+            ];
+            for policy in roster {
+                let group = if disk.name == "emmc" { 8 } else { 4 };
+                let (p, kv) = configure(&policy, Budget::Relaxed, group);
+                let row_bytes = per_row_bytes(&p, &kv, &spec, context).max(1);
+                let max_b = *batches
+                    .iter()
+                    .filter(|&&b| b as u64 * row_bytes <= budget && b <= 8)
+                    .max()
+                    .unwrap_or(&1);
+                let cfg = engine_cfg("nano", max_b, p.clone(), kv.clone(), disk.clone(), context);
+                let (stats, _) = run_throughput(rt.clone(), cfg, context - 64, 1, steps)?;
+                // quality at b=1 (budget-independent fidelity estimate)
+                let qcfg = EngineConfig {
+                    batch: 1,
+                    ..engine_cfg("nano", 1, p.clone(), kv, disk.clone(), context)
+                };
+                let q = evaluate_policy(Rc::clone(&rt), qcfg, 512, 4, 3)?;
+                t.row(vec![
+                    p.name(),
+                    max_b.to_string(),
+                    kvswap::util::fmt_bytes(row_bytes),
+                    format!("{:.1}", stats.tokens_per_sec()),
+                    format!("{:.3}", q.fidelity),
+                ]);
+            }
+            println!("--- disk {} | total budget {:.0} MiB ---", disk.name, total);
+            println!("{}", t.render());
+        }
+    }
+    println!(
+        "paper shape: vLLM/ShadowKV/Loki top accuracy but need large memory \
+         or deliver low throughput; KVSwap wins throughput+memory with \
+         marginal quality loss"
+    );
+    Ok(())
+}

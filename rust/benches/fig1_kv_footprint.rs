@@ -1,0 +1,34 @@
+//! Fig. 1 — KV cache memory footprint of Qwen3-4B (W16A16) across batch
+//! sizes and context lengths. Pure shape arithmetic: reproduces the
+//! paper's absolute numbers (9 GiB at 16K/b4; 54 GiB at 32K/b12).
+
+use kvswap::bench::banner;
+use kvswap::config::paper_spec;
+use kvswap::metrics::Table;
+use kvswap::workload::memory_model::kv_cache_f16_bytes;
+
+fn main() {
+    banner(
+        "Fig. 1 — KV cache footprint, Qwen3-4B (f16)",
+        "rows: batch size; columns: context length; paper: weights alone = 7.5 GiB",
+    );
+    let spec = paper_spec("qwen3-4b");
+    let contexts = [4096usize, 8192, 16384, 32768];
+    let mut t = Table::new(&["batch", "4K", "8K", "16K", "32K"]);
+    for b in [1usize, 4, 8, 12] {
+        let mut row = vec![format!("b={b}")];
+        for s in contexts {
+            let gib = kv_cache_f16_bytes(&spec, b, s) as f64 / (1u64 << 30) as f64;
+            row.push(format!("{gib:.1} GiB"));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    let w_gib = spec.n_params() as f64 * 2.0 / (1u64 << 30) as f64;
+    println!("model weights (f16): {w_gib:.1} GiB (paper: 7.5 GiB)");
+    println!(
+        "paper checkpoints: 16K/b4 -> {:.1} GiB (paper ~9), 32K/b12 -> {:.1} GiB (paper ~54)",
+        kv_cache_f16_bytes(&spec, 4, 16384) as f64 / (1u64 << 30) as f64,
+        kv_cache_f16_bytes(&spec, 12, 32768) as f64 / (1u64 << 30) as f64,
+    );
+}

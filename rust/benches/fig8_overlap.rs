@@ -1,0 +1,52 @@
+//! Fig. 8 — frequency and overlap ratio of predicted critical KV groups
+//! over a long decode (paper: 300 steps; <22% of groups account for 80%
+//! of selections; adjacent steps overlap strongly).
+
+use kvswap::bench::{banner, engine_cfg, runtime};
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::{Engine, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::Table;
+use kvswap::util::cli::Args;
+use kvswap::util::mathx::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 120);
+    let context = args.usize_or("context", 1024);
+    banner(
+        "Fig. 8 — frequency and overlap of predicted critical groups",
+        "paper: <22% of groups carry 80% of selections; strong adjacent-step overlap",
+    );
+    let rt = runtime()?;
+    let cfg = engine_cfg(
+        "nano",
+        1,
+        Policy::KvSwap,
+        KvSwapConfig::default(),
+        DiskProfile::nvme(),
+        context + steps + 64,
+    );
+    let mut e = Engine::new(rt, cfg)?;
+    e.ingest_synthetic(&[context])?;
+    let (_, _, _) = e.decode(steps, false, None)?;
+
+    let mut t = Table::new(&["layer", "mean OLR", "std", "min", "80%-mass group frac"]);
+    for layer in [1usize, 2, 3] {
+        let tr = &e.overlap[0][layer];
+        let s = summarize(&tr.ratios);
+        t.row(vec![
+            layer.to_string(),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.std),
+            format!("{:.2}", s.min),
+            format!("{:.1}%", tr.head_mass_fraction(0.8) * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper shape: overlap ratio high and stable across steps; a small \
+         fraction of distinct groups dominates the selection histogram"
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Tab. 4 (+ App. Tab. 2) — THE throughput grid: tokens/s for every
+//! method × disk × batch × context length (paper: KVSwap beats every
+//! offloading baseline everywhere; eMMC saturates at large batch; KVSwap
+//! can pass vLLM-like at scale; throughput ~flat in context).
+//!
+//! Default runs a representative subset; pass --full for the whole grid.
+
+use kvswap::baselines::{configure, roster, Budget};
+use kvswap::bench::{banner, engine_cfg, paper_context_label, run_throughput, runtime};
+use kvswap::coordinator::Policy;
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::Table;
+use kvswap::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let full = args.flag("full");
+    let steps = args.usize_or("steps", 5);
+    let batches = args.usize_list_or("batches", if full { &[1, 2, 4, 8, 16] } else { &[1, 4, 8] });
+    let contexts =
+        args.usize_list_or("contexts", if full { &[1024, 2048, 4096, 8192] } else { &[2048, 8192] });
+    banner(
+        "Tab. 4 — decode throughput grid (tokens/s)",
+        "context labels show the paper-scale equivalent (nano 4x)",
+    );
+    let rt = runtime()?;
+    let methods: Vec<Policy> = roster()
+        .into_iter()
+        .filter(|p| {
+            full || !matches!(
+                p,
+                Policy::InfiniGen {
+                    head_agg: false,
+                    ..
+                }
+            )
+        })
+        .collect();
+
+    for disk in [DiskProfile::emmc(), DiskProfile::nvme()] {
+        let group = if disk.name == "emmc" { 8 } else { 4 };
+        for &context in &contexts {
+            let mut header: Vec<String> = vec!["method".into()];
+            header.extend(batches.iter().map(|b| format!("b={b}")));
+            let mut t = Table::new(
+                &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            );
+            for policy in &methods {
+                if matches!(policy, Policy::FullMemory) && disk.name == "emmc" {
+                    continue; // vLLM row is disk-independent; print once
+                }
+                let mut cells = vec![policy.name()];
+                for &b in &batches {
+                    if !rt.manifest.presets["nano"].batches.contains(&b) {
+                        cells.push("-".into());
+                        continue;
+                    }
+                    // FlexGen at big contexts is pathologically slow by
+                    // design; trim its steps to keep the bench bounded
+                    let st = if matches!(policy, Policy::FlexGen) { 2 } else { steps };
+                    let (p, kv) = configure(policy, Budget::Relaxed, group);
+                    let cfg = engine_cfg("nano", b, p, kv, disk.clone(), context);
+                    match run_throughput(rt.clone(), cfg, context - 64, 1, st) {
+                        Ok((stats, _)) => cells.push(format!("{:.1}", stats.tokens_per_sec())),
+                        Err(e) => {
+                            cells.push("!".into());
+                            eprintln!("[warn] {}: {e}", policy.name());
+                        }
+                    }
+                }
+                t.row(cells);
+            }
+            println!(
+                "--- disk {} | context {} ---",
+                disk.name,
+                paper_context_label(context)
+            );
+            println!("{}", t.render());
+        }
+    }
+    println!(
+        "paper shape: per-token methods (infinigen/loki) are I/O-crippled; \
+         grouped KVSwap scales with batch; eMMC saturates by b=8-16; \
+         KVSwap's throughput is ~flat in context length; vllm-like wins \
+         small but KVSwap closes/overtakes at scale"
+    );
+    Ok(())
+}

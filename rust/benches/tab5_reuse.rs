@@ -1,0 +1,69 @@
+//! Tab. 5 — reuse-rate and throughput statistics with vs without the
+//! reuse buffer across disks and workload seeds (paper: reuse 75-81%,
+//! stable across inputs; throughput ×2.0-2.1 on NVMe, ×3.8-4.0 on eMMC).
+
+use kvswap::bench::{banner, engine_cfg, run_throughput, runtime};
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::Policy;
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::Table;
+use kvswap::util::cli::Args;
+use kvswap::util::mathx::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let context = args.usize_or("context", 2048);
+    let steps = args.usize_or("steps", 8);
+    let batch = args.usize_or("batch", 4);
+    let n_inputs = args.usize_or("inputs", 4);
+    banner(
+        "Tab. 5 — reuse ratio and throughput, w/ vs w/o the reuse buffer",
+        "several random workloads per cell (paper: 100 inputs, QMSum+MuSiQue)",
+    );
+    let rt = runtime()?;
+    let mut t = Table::new(&[
+        "disk", "reuse min", "reuse max", "reuse std", "reuse avg", "tok/s w/", "tok/s w/o", "speedup",
+    ]);
+    for disk in [DiskProfile::nvme(), DiskProfile::emmc()] {
+        let group = if disk.name == "emmc" { 8 } else { 4 };
+        let mut rates = Vec::new();
+        let mut tps_with = Vec::new();
+        let mut tps_without = Vec::new();
+        for seed in 0..n_inputs {
+            let mut kv = KvSwapConfig::default();
+            kv.group_size = group;
+            kv.n_groups = 256 / group;
+            let mut cfg = engine_cfg("nano", batch, Policy::KvSwap, kv.clone(), disk.clone(), context);
+            cfg.seed = 1000 + seed as u64;
+            let (stats, _) = run_throughput(rt.clone(), cfg, context - 64, 1, steps)?;
+            rates.push(stats.reuse_rate.unwrap_or(0.0) * 100.0);
+            tps_with.push(stats.tokens_per_sec());
+
+            let mut kv2 = kv.clone();
+            kv2.use_reuse = false;
+            let mut cfg2 = engine_cfg("nano", batch, Policy::KvSwap, kv2, disk.clone(), context);
+            cfg2.seed = 1000 + seed as u64;
+            let (stats2, _) = run_throughput(rt.clone(), cfg2, context - 64, 1, steps)?;
+            tps_without.push(stats2.tokens_per_sec());
+        }
+        let r = summarize(&rates);
+        let w = summarize(&tps_with);
+        let wo = summarize(&tps_without);
+        t.row(vec![
+            disk.name.to_string(),
+            format!("{:.1}", r.min),
+            format!("{:.1}", r.max),
+            format!("{:.1}", r.std),
+            format!("{:.1}", r.mean),
+            format!("{:.1}", w.mean),
+            format!("{:.1}", wo.mean),
+            format!("{:.1}x", w.mean / wo.mean.max(1e-9)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper shape: reuse rates high and input-invariant (std <= 1.1%); \
+         speedup larger on the slower disk (2.0-2.1x NVMe, 3.8-4.0x eMMC)"
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Bench harness utilities (criterion is unavailable offline): shared
+//! setup for the per-exhibit bench binaries under `rust/benches/`.
+
+use std::rc::Rc;
+
+use crate::config::KvSwapConfig;
+use crate::coordinator::{Engine, EngineConfig, Policy};
+use crate::disk::DiskProfile;
+use crate::metrics::DecodeStats;
+use crate::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
+
+/// Load the runtime or explain how to build artifacts.
+pub fn runtime() -> anyhow::Result<Rc<PjrtRuntime>> {
+    let dir = default_artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not found in {dir:?}; run `make artifacts` first"
+    );
+    Ok(Rc::new(PjrtRuntime::new(Manifest::load(dir)?)?))
+}
+
+/// Standard bench engine config (virtual clock).
+pub fn engine_cfg(
+    preset: &str,
+    batch: usize,
+    policy: Policy,
+    kv: KvSwapConfig,
+    disk: DiskProfile,
+    max_context: usize,
+) -> EngineConfig {
+    EngineConfig {
+        preset: preset.to_string(),
+        batch,
+        policy,
+        kv,
+        disk,
+        real_time: false,
+        time_scale: 1.0,
+        max_context,
+        seed: 0,
+    }
+}
+
+/// Run a decode-throughput measurement: synthetic contexts, `steps`
+/// decode steps after `warmup_steps` (excluded from stats).
+pub fn run_throughput(
+    rt: Rc<PjrtRuntime>,
+    cfg: EngineConfig,
+    context: usize,
+    warmup_steps: usize,
+    steps: usize,
+) -> anyhow::Result<(DecodeStats, Engine)> {
+    let mut e = Engine::new(rt, cfg.clone())?;
+    e.ingest_synthetic(&vec![context; cfg.batch])?;
+    if warmup_steps > 0 {
+        let _ = e.decode(warmup_steps, false, None)?;
+    }
+    let (stats, _, _) = e.decode(steps, false, None)?;
+    Ok((stats, e))
+}
+
+/// Pretty banner for bench outputs.
+pub fn banner(title: &str, note: &str) {
+    println!("\n==== {title} ====");
+    if !note.is_empty() {
+        println!("{note}");
+    }
+}
+
+/// Paper-scale context label for our scaled-down contexts (DESIGN.md §2:
+/// nano's 8K plays the paper's 32K).
+pub fn paper_context_label(ours: usize) -> String {
+    format!("{}K(paper {}K)", ours / 1024, ours * 4 / 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(paper_context_label(8192), "8K(paper 32K)");
+        assert_eq!(paper_context_label(2048), "2K(paper 8K)");
+    }
+}

@@ -1,0 +1,300 @@
+//! Configuration: model specs (mirroring `python/compile/specs.py`),
+//! runtime parameters (the knobs the paper's offline tuner sets), and
+//! memory-budget accounting.
+
+use crate::util::json::Json;
+
+/// Static GQA-transformer shape description. Parsed from the artifact
+/// manifest; must stay in sync with the Python `ModelSpec`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_base: f64,
+    pub rms_eps: f64,
+}
+
+impl ModelSpec {
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelSpec> {
+        Ok(ModelSpec {
+            name: j.req("name")?.as_str().unwrap_or("?").to_string(),
+            n_layers: j.req("n_layers")?.as_usize().unwrap(),
+            d_model: j.req("d_model")?.as_usize().unwrap(),
+            n_q_heads: j.req("n_q_heads")?.as_usize().unwrap(),
+            n_kv_heads: j.req("n_kv_heads")?.as_usize().unwrap(),
+            head_dim: j.req("head_dim")?.as_usize().unwrap(),
+            d_ff: j.req("d_ff")?.as_usize().unwrap(),
+            vocab: j.req("vocab")?.as_usize().unwrap(),
+            rope_base: j.f64_or("rope_base", 10000.0),
+            rms_eps: j.f64_or("rms_eps", 1e-5),
+        })
+    }
+
+    /// H_kv * d — flattened joint-head K dimension (paper §3.2).
+    pub fn kv_flat_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn q_flat_dim(&self) -> usize {
+        self.n_q_heads * self.head_dim
+    }
+
+    pub fn n_rep(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// K+V bytes for one token in one layer (f32).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        2 * self.kv_flat_dim() as u64 * 4
+    }
+
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.n_layers as u64 * self.kv_bytes_per_token_layer()
+    }
+
+    /// Full-cache bytes for (batch, context).
+    pub fn kv_cache_bytes(&self, batch: usize, context: usize) -> u64 {
+        batch as u64 * context as u64 * self.kv_bytes_per_token()
+    }
+
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let hq = self.q_flat_dim() as u64;
+        let hkv = self.kv_flat_dim() as u64;
+        let f = self.d_ff as u64;
+        let per_layer = d + d * hq + 2 * d * hkv + hq * d + d + 2 * d * f + f * d;
+        self.n_layers as u64 * per_layer + self.vocab as u64 * d + d
+    }
+}
+
+/// A "paper-scale" spec used only for analytical exhibits (Fig. 1 / 3a
+/// reproduce the paper's Qwen3-4B / LLaMA3-8B *numbers*, which depend only
+/// on shape arithmetic, not on running the model).
+pub fn paper_spec(name: &str) -> ModelSpec {
+    match name {
+        // Qwen3-4B: 36 layers, 8 KV heads, head 128, GQA — f16 KV.
+        "qwen3-4b" => ModelSpec {
+            name: "qwen3-4b".into(),
+            n_layers: 36,
+            d_model: 2560,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 9728,
+            vocab: 151_936,
+            rope_base: 1e6,
+            rms_eps: 1e-6,
+        },
+        // LLaMA3-8B: 32 layers, 8 KV heads, head 128.
+        "llama3-8b" => ModelSpec {
+            name: "llama3-8b".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14336,
+            vocab: 128_256,
+            rope_base: 5e5,
+            rms_eps: 1e-5,
+        },
+        _ => panic!("unknown paper spec {name}"),
+    }
+}
+
+/// Runtime parameters of the KVSwap policy — exactly the knobs the paper's
+/// offline tuner (§3.5, Appendix A) chooses: group size G, number of
+/// selected groups M, K-cache compression rank r (sigma = Hkv*d / r),
+/// reuse-buffer capacity C, plus pipeline knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvSwapConfig {
+    /// G: consecutive KV entries per prediction/IO group.
+    pub group_size: usize,
+    /// M: groups selected (and loaded) per layer per step.
+    pub n_groups: usize,
+    /// r: low-rank K-cache rank; sigma = kv_flat_dim / r.
+    pub rank: usize,
+    /// C: reuse-buffer slots (each holds one KV group) per layer.
+    pub reuse_slots: usize,
+    /// Rolling-buffer slots exposed to attention (recent entries).
+    pub rb_slots: usize,
+    /// Attention width of the compiled decode artifact (>= M*G + rb).
+    pub p_sel: usize,
+    /// Compressed-cache capacity (max context) of the predict artifact.
+    pub ncap: usize,
+    /// Relaxation factor alpha (Appendix A.4): fraction of I/O that may
+    /// remain un-hidden before the solver must react.
+    pub alpha: f64,
+    /// Enable the reuse buffer (Tab. 5 ablates this).
+    pub use_reuse: bool,
+    /// Enable the rolling buffer (App. Tab. 3 ablates this).
+    pub use_rolling: bool,
+}
+
+impl Default for KvSwapConfig {
+    fn default() -> Self {
+        KvSwapConfig {
+            group_size: 4,
+            n_groups: 64,
+            rank: 16,
+            reuse_slots: 96,
+            rb_slots: 16,
+            p_sel: 272,
+            ncap: 2048,
+            alpha: 0.15,
+            use_reuse: true,
+            use_rolling: true,
+        }
+    }
+}
+
+impl KvSwapConfig {
+    /// Selected entries per step (the paper's MG; default 256 ≈ MG=400
+    /// scaled to our context lengths).
+    pub fn selected_entries(&self) -> usize {
+        self.group_size * self.n_groups
+    }
+
+    /// Per-batch-row KV *management* memory (bytes) this config costs:
+    /// compressed K cache + reuse buffer + rolling buffer + preload
+    /// staging, per layer summed over layers. This is the quantity the
+    /// paper budgets (Tab. 1: "KV memory budget").
+    pub fn management_bytes_per_seq(&self, spec: &ModelSpec, context: usize) -> u64 {
+        let hd = spec.kv_flat_dim() as u64;
+        let kv_entry = spec.kv_bytes_per_token_layer(); // K+V, one layer
+        let l = spec.n_layers as u64;
+        let klr = context as u64 * self.rank as u64 * 4 * l; // compressed K
+        let reuse = self.reuse_slots as u64 * self.group_size as u64 * kv_entry * l;
+        let rolling = self.rb_slots as u64 * kv_entry * l;
+        // preload staging buffer is shared across layers (Appendix A.2)
+        let staging = self.selected_entries() as u64 * kv_entry;
+        let _ = hd;
+        klr + reuse + rolling + staging
+    }
+
+    pub fn sigma(&self, spec: &ModelSpec) -> f64 {
+        spec.kv_flat_dim() as f64 / self.rank as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("group_size", self.group_size.into()),
+            ("n_groups", self.n_groups.into()),
+            ("rank", self.rank.into()),
+            ("reuse_slots", self.reuse_slots.into()),
+            ("rb_slots", self.rb_slots.into()),
+            ("p_sel", self.p_sel.into()),
+            ("ncap", self.ncap.into()),
+            ("alpha", self.alpha.into()),
+            ("use_reuse", self.use_reuse.into()),
+            ("use_rolling", self.use_rolling.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> KvSwapConfig {
+        let d = KvSwapConfig::default();
+        KvSwapConfig {
+            group_size: j.usize_or("group_size", d.group_size),
+            n_groups: j.usize_or("n_groups", d.n_groups),
+            rank: j.usize_or("rank", d.rank),
+            reuse_slots: j.usize_or("reuse_slots", d.reuse_slots),
+            rb_slots: j.usize_or("rb_slots", d.rb_slots),
+            p_sel: j.usize_or("p_sel", d.p_sel),
+            ncap: j.usize_or("ncap", d.ncap),
+            alpha: j.f64_or("alpha", d.alpha),
+            use_reuse: j.get("use_reuse").and_then(|v| v.as_bool()).unwrap_or(d.use_reuse),
+            use_rolling: j
+                .get("use_rolling")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.use_rolling),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano() -> ModelSpec {
+        ModelSpec {
+            name: "nano".into(),
+            n_layers: 4,
+            d_model: 128,
+            n_q_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            vocab: 512,
+            rope_base: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn kv_byte_arithmetic() {
+        let s = nano();
+        assert_eq!(s.kv_flat_dim(), 128);
+        assert_eq!(s.kv_bytes_per_token_layer(), 1024);
+        assert_eq!(s.kv_bytes_per_token(), 4096);
+        assert_eq!(s.kv_cache_bytes(8, 8192), 8 * 8192 * 4096);
+    }
+
+    #[test]
+    fn paper_spec_fig1_scale() {
+        // Fig. 1: Qwen3-4B at 16K context, batch 4 -> ~9 GiB (f16).
+        let q = paper_spec("qwen3-4b");
+        let f16_bytes = q.kv_cache_bytes(4, 16384) / 2; // our arithmetic is f32
+        let gib = f16_bytes as f64 / (1u64 << 30) as f64;
+        assert!((8.0..10.0).contains(&gib), "got {gib} GiB");
+        // and 32K context, batch 12 -> ~54 GiB
+        let f16b = q.kv_cache_bytes(12, 32768) / 2;
+        let gib2 = f16b as f64 / (1u64 << 30) as f64;
+        assert!((50.0..58.0).contains(&gib2), "got {gib2} GiB");
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let mut c = KvSwapConfig::default();
+        c.group_size = 8;
+        c.alpha = 0.3;
+        c.use_reuse = false;
+        let j = c.to_json();
+        let back = KvSwapConfig::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn management_memory_much_smaller_than_full_cache() {
+        let s = nano();
+        let c = KvSwapConfig::default();
+        let full = s.kv_cache_bytes(1, 2048);
+        let mgmt = c.management_bytes_per_seq(&s, 2048);
+        assert!(
+            (mgmt as f64) < (full as f64) * 0.55,
+            "mgmt {mgmt} vs full {full}"
+        );
+    }
+
+    #[test]
+    fn sigma_matches_rank() {
+        let s = nano();
+        let mut c = KvSwapConfig::default();
+        c.rank = 4;
+        assert_eq!(c.sigma(&s), 32.0);
+        c.rank = 16;
+        assert_eq!(c.sigma(&s), 8.0);
+    }
+
+    #[test]
+    fn selected_entries() {
+        let c = KvSwapConfig::default();
+        assert_eq!(c.selected_entries(), 256);
+        assert!(c.p_sel >= c.selected_entries() + c.rb_slots);
+    }
+}

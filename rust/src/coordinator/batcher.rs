@@ -1,0 +1,193 @@
+//! Dynamic batcher: groups queued requests into the batch sizes the AOT
+//! artifacts were compiled for. Shapes are static per executable, so the
+//! batcher picks the largest compiled batch that the queue can fill
+//! (padding the last wave), subject to a linger deadline — the standard
+//! serving trade-off between batching efficiency and queueing delay.
+
+use std::collections::VecDeque;
+
+use crate::workload::tracegen::Request;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Batch sizes with compiled artifacts, ascending.
+    pub supported: Vec<usize>,
+    /// Max time a request may wait for co-batching (seconds).
+    pub linger_s: f64,
+    /// Max context the engine is provisioned for.
+    pub max_context: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            supported: vec![1, 2, 4, 8],
+            linger_s: 0.05,
+            max_context: 2048,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<(Request, f64)>, // (request, enqueue time)
+    pub rejected: u64,
+}
+
+/// A wave of requests to run as one engine batch. `pad` rows are added
+/// by the caller to reach `batch` (engine artifacts need exact shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wave {
+    pub batch: usize,
+    pub requests: Vec<Request>,
+}
+
+impl Wave {
+    pub fn padding(&self) -> usize {
+        self.batch - self.requests.len()
+    }
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.supported.is_empty());
+        let mut cfg = cfg;
+        cfg.supported.sort_unstable();
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            rejected: 0,
+        }
+    }
+
+    pub fn push(&mut self, req: Request, now_s: f64) -> bool {
+        if req.context > self.cfg.max_context {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back((req, now_s));
+        true
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next wave if batching policy allows:
+    /// * queue fills the largest supported batch → dispatch immediately;
+    /// * else, the oldest request exceeded the linger deadline → dispatch
+    ///   the largest supported batch ≤ queue length (padding if queue is
+    ///   smaller than the smallest supported batch).
+    pub fn next_wave(&mut self, now_s: f64) -> Option<Wave> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len();
+        let max_b = *self.cfg.supported.last().unwrap();
+        let oldest_wait = now_s - self.queue.front().unwrap().1;
+        let deadline = oldest_wait >= self.cfg.linger_s;
+        if n < max_b && !deadline {
+            return None;
+        }
+        let batch = self
+            .cfg
+            .supported
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .copied()
+            .unwrap_or(*self.cfg.supported.first().unwrap());
+        let take = batch.min(n);
+        let requests: Vec<Request> = self.queue.drain(..take).map(|(r, _)| r).collect();
+        Some(Wave { batch, requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn req(id: u64, context: usize) -> Request {
+        Request {
+            id,
+            context,
+            decode: 8,
+            arrival_s: 0.0,
+            seed: id,
+        }
+    }
+
+    #[test]
+    fn dispatches_full_batch_immediately() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for i in 0..8 {
+            assert!(b.push(req(i, 512), 0.0));
+        }
+        let w = b.next_wave(0.0).unwrap();
+        assert_eq!(w.batch, 8);
+        assert_eq!(w.requests.len(), 8);
+        assert_eq!(w.padding(), 0);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn lingers_before_dispatching_partial() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for i in 0..3 {
+            b.push(req(i, 512), 0.0);
+        }
+        assert!(b.next_wave(0.01).is_none()); // still lingering
+        let w = b.next_wave(0.06).unwrap(); // deadline passed
+        assert_eq!(w.batch, 2); // largest supported <= 3
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn single_request_pads_to_smallest_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            supported: vec![2, 4],
+            ..Default::default()
+        });
+        b.push(req(0, 512), 0.0);
+        let w = b.next_wave(1.0).unwrap();
+        assert_eq!(w.batch, 2);
+        assert_eq!(w.requests.len(), 1);
+        assert_eq!(w.padding(), 1);
+    }
+
+    #[test]
+    fn rejects_oversized_contexts() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert!(!b.push(req(0, 99999), 0.0));
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn prop_waves_partition_queue_fifo() {
+        proptest::check("batcher-fifo", 100, |rng| {
+            let mut b = Batcher::new(BatcherConfig::default());
+            let n = rng.range(1, 40);
+            for i in 0..n {
+                b.push(req(i as u64, 256 + rng.below(1024)), 0.0);
+            }
+            let mut seen = Vec::new();
+            let mut t = 1.0;
+            while let Some(w) = b.next_wave(t) {
+                crate::prop_assert!(
+                    w.requests.len() <= w.batch,
+                    "wave overfilled"
+                );
+                seen.extend(w.requests.iter().map(|r| r.id));
+                t += 1.0;
+            }
+            crate::prop_assert!(
+                seen == (0..n as u64).collect::<Vec<_>>(),
+                "requests lost or reordered: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,1271 @@
+//! The decode engine: KVSwap's layer-pipelined, I/O-overlapped decode
+//! loop (paper §3.4), shared by every baseline policy.
+//!
+//! Per decode step (policy = KvSwap):
+//!
+//! ```text
+//! x0 = embed(tok)                 (loads for layer 0 were issued at the
+//! for layer l in 0..L:             end of the previous step)
+//!     recv loads for layer l  ───── I/O thread (SimDisk, paced/modeled)
+//!     predict layer l+1 scores from x_l (HLO predict artifact, Eq. 1)
+//!     select top-M groups, diff vs reuse buffer, send misses to I/O ──►
+//!     gather: mapping table -> contiguous k_sel/v_sel/mask
+//!     x_{l+1} = decode_block(l, x_l, gathered KV)   (Pallas kernel)
+//! tok' = logits_argmax(x_L); append per-layer new KV (rolling buffer,
+//! group flush -> disk + K_lr); predict layer 0 for the next step.
+//! ```
+//!
+//! Timing: in **real** mode the I/O thread genuinely sleeps (SimDisk
+//! pacing) and the pipeline overlap is physical. In **virtual** mode the
+//! engine folds measured compute and modeled I/O into a virtual clock:
+//! per layer, `stall = max(0, io_time - compute_since_issue)` — the
+//! overlap accounting of Appendix A.4.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::policy::Policy;
+use crate::config::{KvSwapConfig, ModelSpec};
+use crate::disk::{DiskProfile, SimDisk};
+use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
+use crate::metrics::{Breakdown, DecodeStats, Phase};
+use crate::predictor::{self, OverlapTracker};
+use crate::runtime::host_ref::{HostModel, KvLayer};
+use crate::runtime::tensor::{Tensor, TensorI32};
+use crate::runtime::{ModelRuntime, PjrtRuntime};
+use crate::util::clock::Clock;
+use crate::util::mathx;
+use crate::util::rng::Rng;
+use crate::workload::synthetic_kv_rows;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub preset: String,
+    pub batch: usize,
+    pub policy: Policy,
+    pub kv: KvSwapConfig,
+    pub disk: DiskProfile,
+    /// true: SimDisk sleeps (scaled); false: virtual-clock accounting.
+    pub real_time: bool,
+    pub time_scale: f64,
+    /// Maximum context to provision (chooses ncap + disk capacity).
+    pub max_context: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            preset: "nano".into(),
+            batch: 1,
+            policy: Policy::KvSwap,
+            kv: KvSwapConfig::default(),
+            disk: DiskProfile::nvme(),
+            real_time: false,
+            time_scale: 1.0,
+            max_context: 2048,
+            seed: 0,
+        }
+    }
+}
+
+/// One disk extent to load, tagged with the group/token id it serves.
+#[derive(Debug, Clone)]
+struct Extent {
+    tag: u32,
+    offset: u64,
+    len: usize,
+}
+
+enum IoReq {
+    Loads {
+        layer: usize,
+        per_seq: Vec<(usize, Vec<Extent>)>,
+    },
+    Stop,
+}
+
+struct IoResp {
+    layer: usize,
+    per_seq: Vec<(usize, Vec<(u32, Vec<u8>)>)>,
+    io_time: Duration,
+}
+
+/// Per-sequence engine state.
+struct SeqUnit {
+    kv: SeqState,
+    /// Full in-memory cache (FullMemory policy and FlexGen staging).
+    mem: Vec<KvLayer>,
+    last_token: i32,
+    /// Current context length (== position of the token being decoded).
+    pos: usize,
+    /// Per-layer staging for loads when the reuse buffer is off.
+    staging: Vec<HashMap<u32, Vec<f32>>>,
+    /// Selection in flight per layer (set when loads are issued).
+    pending_sel: Vec<Vec<u32>>,
+    /// Per-layer freshly generated KV awaiting the post-logits append.
+    pending_kv: Vec<Option<(Vec<f32>, Vec<f32>)>>,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    spec: ModelSpec,
+    mr: ModelRuntime,
+    host: HostModel,
+    manager: KvManager,
+    pub disk: Arc<SimDisk>,
+    clock: Clock,
+    /// Per-layer prediction adapter (policy-dependent construction).
+    adapters: Vec<Tensor>,
+    seqs: Vec<SeqUnit>,
+    io_tx: Sender<IoReq>,
+    io_rx: Receiver<IoResp>,
+    _io_thread: Option<std::thread::JoinHandle<()>>,
+    pub breakdown: Breakdown,
+    /// One tracker per (seq, layer): overlap is a per-stream statistic
+    /// (paper Fig. 8 tracks a single layer across steps).
+    pub overlap: Vec<Vec<OverlapTracker>>,
+    ncap: usize,
+    rank: usize,
+    /// Outstanding I/O issue timestamp (for overlap accounting).
+    issued_at: Option<Instant>,
+    /// Layer-0 loads already in flight (issued at the end of the
+    /// previous step / a previous decode() call).
+    l0_inflight: bool,
+    /// Cached padded K_lr tensors per layer ([b, ncap, r]), synced
+    /// incrementally as groups flush — avoids rebuilding ~1 MiB/layer
+    /// from scratch every predict call (EXPERIMENTS.md §Perf change 2).
+    klr_cache: Vec<Tensor>,
+    /// Rows of `klr_cache` already synced, per (layer, seq).
+    klr_synced: Vec<Vec<usize>>,
+    /// Most recent final activations [b, D] (for quality comparison).
+    pub last_x: Option<Tensor>,
+    decode_t0: Option<f64>,
+    tokens_generated: u64,
+    steps_done: u64,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<PjrtRuntime>, cfg: EngineConfig) -> anyhow::Result<Engine> {
+        let info = rt
+            .manifest
+            .presets
+            .get(&cfg.preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {}", cfg.preset))?
+            .clone();
+        let spec = info.spec.clone();
+        let mr = ModelRuntime::new(rt.clone(), &cfg.preset, cfg.batch)?;
+        let host = HostModel::new(spec.clone(), rt.host_weights(&cfg.preset)?);
+
+        // policy-specific group granularity on disk
+        let (g_layout, rank) = match &cfg.policy {
+            Policy::KvSwap | Policy::FlexGen | Policy::FullMemory => {
+                (cfg.kv.group_size, cfg.kv.rank)
+            }
+            Policy::InfiniGen { .. } | Policy::Loki => (1, cfg.kv.rank),
+            Policy::ShadowKv { chunk, rank } => (*chunk, *rank),
+        };
+        // clamp to the nearest exported adapter rank (small/med presets
+        // only export rank 16); everything downstream (manager, K_lr,
+        // predict artifact, adapters) uses the effective rank
+        let rank = if info.ranks.contains(&rank) {
+            rank
+        } else {
+            let eff = *info
+                .ranks
+                .iter()
+                .min_by_key(|&&a| (a as i64 - rank as i64).unsigned_abs())
+                .ok_or_else(|| anyhow::anyhow!("no adapter ranks for {}", cfg.preset))?;
+            crate::log_debug!(
+                "preset {} has no rank-{rank} adapter; using {eff}",
+                cfg.preset
+            );
+            eff
+        };
+        // predict artifact variant: smallest compiled ncap covering the
+        // provisioned context *that exists for this rank* (rank sweeps
+        // are only compiled at some ncaps)
+        let mut ncaps = info.ncaps.clone();
+        ncaps.sort_unstable();
+        let ncap = if matches!(cfg.policy, Policy::KvSwap) {
+            *ncaps
+                .iter()
+                .filter(|&&n| {
+                    rt.manifest
+                        .has(&cfg.preset, cfg.batch, &format!("predict_n{n}_r{rank}"))
+                })
+                .find(|&&n| n >= cfg.max_context)
+                .or_else(|| {
+                    ncaps.iter().rev().find(|&&n| {
+                        rt.manifest
+                            .has(&cfg.preset, cfg.batch, &format!("predict_n{n}_r{rank}"))
+                    })
+                })
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no predict artifact for rank {rank} in {}/b{}",
+                        cfg.preset,
+                        cfg.batch
+                    )
+                })?
+        } else {
+            *ncaps
+                .iter()
+                .find(|&&n| n >= cfg.max_context)
+                .unwrap_or(ncaps.last().expect("no ncaps"))
+        };
+
+        let page_align = match &cfg.policy {
+            // KVSwap aligns group records to the device granule (§3.3)
+            Policy::KvSwap => cfg.disk.page_bytes.min(4096),
+            // token-granular baselines pack records (fragmented reads)
+            Policy::InfiniGen { .. } | Policy::Loki => 0,
+            _ => 4096,
+        };
+        let layout = DiskLayout::new(
+            spec.kv_flat_dim(),
+            g_layout,
+            cfg.max_context + 1024,
+            spec.n_layers,
+            page_align,
+        );
+
+        let clock = if cfg.real_time {
+            Clock::real_scaled(cfg.time_scale)
+        } else {
+            Clock::virtual_()
+        };
+        let pacing = if cfg.real_time { Some(clock.clone()) } else { None };
+        let disk = Arc::new(SimDisk::new(
+            cfg.disk.clone(),
+            Box::new(crate::disk::MemBackend::new()),
+            pacing,
+        ));
+
+        let sel_entries = cfg.kv.selected_entries();
+        let sel_region = (sel_entries / g_layout) * g_layout;
+        let mgr_cfg = ManagerConfig {
+            group: g_layout,
+            rank,
+            reuse_slots: if cfg.policy.uses_reuse() && cfg.kv.use_reuse {
+                // C slots hold groups; token-granular policies hold tokens
+                cfg.kv.reuse_slots * cfg.kv.group_size / g_layout
+            } else {
+                0
+            },
+            rb_visible: cfg.kv.rb_slots,
+            sel_region,
+            p: cfg.kv.p_sel,
+            cache_flushed: true,
+            expose_rolling: cfg.kv.use_rolling,
+        };
+        let manager = KvManager::new(layout, disk.clone(), mgr_cfg);
+
+        // prediction adapters
+        let weights = rt.host_weights(&cfg.preset)?;
+        let adapters: Vec<Tensor> = (0..spec.n_layers)
+            .map(|l| match &cfg.policy {
+                Policy::InfiniGen { .. } => {
+                    // index selection: one-hot on the top-|wk column| dims
+                    let wk = &weights[&format!("layer{l}.wk")];
+                    let hd = spec.kv_flat_dim();
+                    let mut norms = vec![0.0f32; hd];
+                    for i in 0..spec.d_model {
+                        for j in 0..hd {
+                            norms[j] += wk.data[i * hd + j] * wk.data[i * hd + j];
+                        }
+                    }
+                    let top = mathx::top_k_indices(&norms, rank);
+                    let mut a = Tensor::zeros(&[hd, rank]);
+                    for (col, &dim) in top.iter().enumerate() {
+                        *a.at_mut(&[dim, col]) = 1.0;
+                    }
+                    a
+                }
+                _ => weights
+                    .get(&format!("layer{l}.A{rank}"))
+                    .unwrap_or_else(|| panic!("no adapter A{rank} for layer {l}"))
+                    .clone(),
+            })
+            .collect();
+
+        // I/O thread
+        let (io_tx, req_rx) = channel::<IoReq>();
+        let (resp_tx, io_rx) = channel::<IoResp>();
+        let disk2 = disk.clone();
+        let io_thread = std::thread::Builder::new()
+            .name("kvswap-io".into())
+            .spawn(move || {
+                while let Ok(req) = req_rx.recv() {
+                    match req {
+                        IoReq::Stop => break,
+                        IoReq::Loads { layer, per_seq } => {
+                            // queue-depth-aware batch: all extents of the
+                            // layer (across sequences) issued together
+                            let mut out = Vec::with_capacity(per_seq.len());
+                            let mut io_time = Duration::ZERO;
+                            let all: Vec<(u64, usize)> = per_seq
+                                .iter()
+                                .flat_map(|(_, es)| es.iter().map(|e| (e.offset, e.len)))
+                                .collect();
+                            let total: usize = all.iter().map(|e| e.1).sum();
+                            let mut flat = vec![0u8; total];
+                            match disk2.read_batch(&all, &mut flat) {
+                                Ok(d) => io_time += d,
+                                Err(err) => eprintln!("[kvswap-io] read error: {err}"),
+                            }
+                            let mut cursor = 0;
+                            for (seq, extents) in per_seq {
+                                let mut results = Vec::with_capacity(extents.len());
+                                for e in extents {
+                                    results.push((
+                                        e.tag,
+                                        flat[cursor..cursor + e.len].to_vec(),
+                                    ));
+                                    cursor += e.len;
+                                }
+                                out.push((seq, results));
+                            }
+                            if resp_tx
+                                .send(IoResp {
+                                    layer,
+                                    per_seq: out,
+                                    io_time,
+                                })
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })?;
+
+        let batch = cfg.batch;
+        let n_layers = spec.n_layers;
+        let mut seqs = Vec::with_capacity(batch);
+        for i in 0..batch {
+            seqs.push(SeqUnit {
+                kv: manager.new_seq(i),
+                mem: (0..n_layers).map(|_| KvLayer::new(spec.kv_flat_dim())).collect(),
+                last_token: 0,
+                pos: 0,
+                staging: (0..n_layers).map(|_| HashMap::new()).collect(),
+                pending_sel: vec![Vec::new(); n_layers],
+                pending_kv: (0..n_layers).map(|_| None).collect(),
+            });
+        }
+
+        Ok(Engine {
+            cfg,
+            spec,
+            mr,
+            host,
+            manager,
+            disk,
+            clock,
+            adapters,
+            seqs,
+            io_tx,
+            io_rx,
+            _io_thread: Some(io_thread),
+            breakdown: Breakdown::default(),
+            overlap: (0..batch)
+                .map(|_| vec![OverlapTracker::default(); n_layers])
+                .collect(),
+            ncap,
+            rank,
+            issued_at: None,
+            l0_inflight: false,
+            klr_cache: (0..n_layers)
+                .map(|_| Tensor::zeros(&[batch, ncap, rank]))
+                .collect(),
+            klr_synced: (0..n_layers).map(|_| vec![0; batch]).collect(),
+            last_x: None,
+            decode_t0: None,
+            tokens_generated: 0,
+            steps_done: 0,
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn ncap(&self) -> usize {
+        self.ncap
+    }
+
+    /// Mean selection-overlap ratio across (seq, layer) streams (§3.4.2).
+    pub fn mean_overlap(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0;
+        for per_seq in &self.overlap {
+            for t in per_seq {
+                if !t.ratios.is_empty() {
+                    sum += t.mean_overlap();
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Total in-memory KV management bytes across sequences (Fig. 3a).
+    pub fn management_bytes(&self) -> u64 {
+        if self.cfg.policy.memory_resident() {
+            return self
+                .seqs
+                .iter()
+                .map(|s| s.mem.iter().map(|l| (l.k.len() + l.v.len()) as u64 * 4).sum::<u64>())
+                .sum();
+        }
+        self.seqs.iter().map(|s| self.manager.management_bytes(&s.kv)).sum()
+    }
+
+    // -----------------------------------------------------------------
+    // ingestion
+
+    /// Materialize synthetic KV state for decode benches: `contexts[i]`
+    /// tokens for sequence i (DESIGN.md §2 substitution — decode speed
+    /// does not depend on KV content).
+    pub fn ingest_synthetic(&mut self, contexts: &[usize]) -> anyhow::Result<()> {
+        anyhow::ensure!(contexts.len() == self.cfg.batch);
+        let hd = self.spec.kv_flat_dim();
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5EED);
+        for (i, &ctx) in contexts.iter().enumerate() {
+            anyhow::ensure!(ctx <= self.cfg.max_context, "context {ctx} over max");
+            for layer in 0..self.spec.n_layers {
+                let (k, v) =
+                    synthetic_kv_rows(ctx, hd, self.cfg.seed ^ ((i as u64) << 20) ^ layer as u64);
+                self.ingest_layer_rows(i, layer, &k, &v)?;
+            }
+            self.seqs[i].pos = ctx;
+            self.seqs[i].kv.n_tokens = ctx;
+            self.seqs[i].last_token = rng.below(self.spec.vocab) as i32;
+        }
+        Ok(())
+    }
+
+    fn ingest_layer_rows(
+        &mut self,
+        seq_idx: usize,
+        layer: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> anyhow::Result<()> {
+        let hd = self.spec.kv_flat_dim();
+        let su = &mut self.seqs[seq_idx];
+        if self.cfg.policy.memory_resident() {
+            let n = k_rows.len() / hd;
+            for t in 0..n {
+                su.mem[layer].push(
+                    &k_rows[t * hd..(t + 1) * hd],
+                    &v_rows[t * hd..(t + 1) * hd],
+                );
+            }
+            return Ok(());
+        }
+        self.manager
+            .ingest_prefill(&mut su.kv, layer, k_rows, v_rows, &self.adapters[layer])
+    }
+
+    /// Real chunked prefill through the AOT artifacts (quality path and
+    /// serving example). All prompts must share a length ≤ prefill_ncap.
+    /// Returns the first generated token per sequence.
+    pub fn prefill(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(prompts.len() == self.cfg.batch);
+        let s_len = prompts[0].len();
+        anyhow::ensure!(prompts.iter().all(|p| p.len() == s_len), "ragged prompts");
+        let info = &self.mr.rt.manifest.presets[&self.cfg.preset].clone();
+        let (chunk, pncap) = (info.prefill_chunk, info.prefill_ncap);
+        anyhow::ensure!(s_len % chunk == 0, "prompt length must be a multiple of {chunk}");
+        anyhow::ensure!(s_len <= pncap, "prompt too long for prefill artifact");
+        let (b, hkv, d) = (self.cfg.batch, self.spec.n_kv_heads, self.spec.head_dim);
+        let hd = self.spec.kv_flat_dim();
+
+        let mut k_caches: Vec<Tensor> =
+            (0..self.spec.n_layers).map(|_| Tensor::zeros(&[b, hkv, pncap, d])).collect();
+        let mut v_caches: Vec<Tensor> =
+            (0..self.spec.n_layers).map(|_| Tensor::zeros(&[b, hkv, pncap, d])).collect();
+        let mut x_last = Tensor::zeros(&[b, self.spec.d_model]);
+        for c0 in (0..s_len).step_by(chunk) {
+            let mut toks = Vec::with_capacity(b * chunk);
+            for p in prompts {
+                toks.extend_from_slice(&p[c0..c0 + chunk]);
+            }
+            let mut x = self
+                .mr
+                .embed_chunk(&TensorI32::from_vec(&[b, chunk], toks), chunk)?;
+            let start = vec![c0 as i32; b];
+            for layer in 0..self.spec.n_layers {
+                let (x1, k_chunk, v_chunk) = self.mr.prefill_block(
+                    layer,
+                    chunk,
+                    pncap,
+                    x,
+                    k_caches[layer].clone(),
+                    v_caches[layer].clone(),
+                    &start,
+                )?;
+                x = x1;
+                for bi in 0..b {
+                    for g in 0..hkv {
+                        for t in 0..chunk {
+                            for dd in 0..d {
+                                *k_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
+                                    k_chunk.at(&[bi, g, t, dd]);
+                                *v_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
+                                    v_chunk.at(&[bi, g, t, dd]);
+                            }
+                        }
+                    }
+                }
+            }
+            if c0 + chunk == s_len {
+                for bi in 0..b {
+                    x_last.row_mut(&[bi]).copy_from_slice(x.row(&[bi, chunk - 1]));
+                }
+            }
+        }
+
+        // ingest caches as token-major rows
+        for bi in 0..b {
+            for layer in 0..self.spec.n_layers {
+                let mut k_rows = vec![0.0f32; s_len * hd];
+                let mut v_rows = vec![0.0f32; s_len * hd];
+                for t in 0..s_len {
+                    for g in 0..hkv {
+                        for dd in 0..d {
+                            k_rows[t * hd + g * d + dd] = k_caches[layer].at(&[bi, g, t, dd]);
+                            v_rows[t * hd + g * d + dd] = v_caches[layer].at(&[bi, g, t, dd]);
+                        }
+                    }
+                }
+                self.ingest_layer_rows(bi, layer, &k_rows, &v_rows)?;
+            }
+            self.seqs[bi].pos = s_len;
+            self.seqs[bi].kv.n_tokens = s_len;
+        }
+        let (first, _) = self.mr.logits_argmax(x_last)?;
+        for (bi, &t) in first.iter().enumerate() {
+            self.seqs[bi].last_token = t;
+        }
+        Ok(first)
+    }
+
+    /// Overwrite the KV entry at `token_pos` in every layer (NIAH
+    /// planting): patches disk records, the compressed K cache, the
+    /// in-memory cache, and invalidates any stale reuse-buffer copy.
+    pub fn plant_needle(
+        &mut self,
+        seq_idx: usize,
+        token_pos: usize,
+        keys: &[Vec<f32>],
+        values: &[Vec<f32>],
+    ) -> anyhow::Result<()> {
+        let hd = self.spec.kv_flat_dim();
+        let g = self.manager.cfg.group;
+        for layer in 0..self.spec.n_layers {
+            let key = &keys[layer];
+            let val = &values[layer];
+            let su = &mut self.seqs[seq_idx];
+            if self.cfg.policy.memory_resident() {
+                su.mem[layer].k[token_pos * hd..(token_pos + 1) * hd].copy_from_slice(key);
+                su.mem[layer].v[token_pos * hd..(token_pos + 1) * hd].copy_from_slice(val);
+                continue;
+            }
+            let (gid, member) = self.manager.layout.locate(token_pos);
+            anyhow::ensure!(
+                token_pos < su.kv.layers[layer].klr.len(),
+                "needle must land in flushed region"
+            );
+            // read-modify-write the disk record
+            let off = self.manager.layout.offset(su.kv.seq_slot, layer, gid);
+            let len = self.manager.layout.group_payload_bytes() as usize;
+            let mut buf = vec![0u8; len];
+            self.disk.read(off, &mut buf)?;
+            let (mut k_rows, mut v_rows) = self.manager.layout.decode_group(&buf);
+            k_rows[member * hd..(member + 1) * hd].copy_from_slice(key);
+            v_rows[member * hd..(member + 1) * hd].copy_from_slice(val);
+            let rec = self.manager.layout.encode_group(&k_rows, &v_rows);
+            self.disk.write(off, &rec)?;
+            // patch the compressed row: K_lr[pos] = key @ A
+            let compressed = self.host.compress_k(&self.adapters[layer], key);
+            let st = &mut su.kv.layers[layer];
+            st.klr.patch_row(token_pos, &compressed);
+            st.reuse.invalidate(gid as u32);
+            // force the K_lr tensor cache to re-sync past the patch
+            self.klr_synced[layer][seq_idx] = self.klr_synced[layer][seq_idx].min(token_pos);
+        }
+        let _ = g;
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // decode
+
+    /// Decode `steps` tokens for every sequence; returns (stats, final
+    /// activations per step if `collect_x`, sampled tokens per step).
+    ///
+    /// `forced`: teacher-forcing — override the sampled token of step j
+    /// with `forced[j]` (used by the quality harness so that a method and
+    /// the Full-KV oracle stay on the same trajectory and per-step
+    /// activation fidelity is well defined).
+    pub fn decode(
+        &mut self,
+        steps: usize,
+        collect_x: bool,
+        forced: Option<&[Vec<i32>]>,
+    ) -> anyhow::Result<(DecodeStats, Vec<Tensor>, Vec<Vec<i32>>)> {
+        self.warmup()?;
+        self.disk.stats().reset();
+        self.breakdown = Breakdown::default();
+        self.decode_t0 = Some(self.clock.now_secs());
+        let mut xs = Vec::new();
+        let mut token_hist = Vec::new();
+
+        // cold start: issue loads for layer 0 of the first step (unless
+        // a previous decode() call left them in flight)
+        if !self.cfg.policy.memory_resident() && !self.l0_inflight {
+            let x0 = self.timed_embed()?;
+            self.predict_and_issue(0, &x0)?;
+            self.l0_inflight = true;
+        }
+
+        for j in 0..steps {
+            let force = forced.and_then(|f| f.get(j)).map(|v| v.as_slice());
+            let (x_final, toks) = self.step(force)?;
+            token_hist.push(toks);
+            if collect_x {
+                xs.push(x_final.clone());
+            }
+            self.last_x = Some(x_final);
+        }
+
+        let elapsed = self.clock.now_secs() - self.decode_t0.unwrap();
+        let snap = self.disk.stats().snapshot();
+        let reuse_rate = if self.manager.cfg.reuse_slots > 0 {
+            let mut rates = Vec::new();
+            for s in &self.seqs {
+                for l in &s.kv.layers {
+                    let (h, m) = l.reuse.counters();
+                    if h + m > 0 {
+                        rates.push(h as f64 / (h + m) as f64);
+                    }
+                }
+            }
+            if rates.is_empty() {
+                None
+            } else {
+                Some(rates.iter().sum::<f64>() / rates.len() as f64)
+            }
+        } else {
+            None
+        };
+        let mut bd = self.breakdown.clone();
+        bd.steps = self.steps_done;
+        Ok((
+            DecodeStats {
+                tokens: self.tokens_generated,
+                steps: self.steps_done,
+                seconds: elapsed,
+                breakdown: bd,
+                reuse_rate,
+                io_utilization: snap.io_utilization(self.cfg.disk.read_bw),
+                bytes_loaded: snap.logical_read_bytes,
+                mean_overlap: self.mean_overlap(),
+            },
+            xs,
+            token_hist,
+        ))
+    }
+
+    /// Pre-compile every executable the decode loop will touch so that
+    /// lazy compilation never pollutes measured step timings.
+    pub fn warmup(&mut self) -> anyhow::Result<()> {
+        let rt = self.mr.rt.clone();
+        let (preset, b) = (self.cfg.preset.clone(), self.cfg.batch);
+        rt.warm_weights(&preset)?;
+        rt.executable(&preset, b, "embed")?;
+        rt.executable(&preset, b, "logits_argmax")?;
+        match self.cfg.policy {
+            Policy::FlexGen | Policy::FullMemory => {
+                let n = self.full_ncap()?;
+                rt.executable(&preset, b, &format!("decode_full_n{n}"))?;
+            }
+            _ => {
+                rt.executable(&preset, b, &format!("decode_p{}", self.manager.cfg.p))?;
+            }
+        }
+        if matches!(self.cfg.policy, Policy::KvSwap) {
+            rt.executable(
+                &preset,
+                b,
+                &format!("predict_n{}_r{}", self.ncap, self.rank),
+            )?;
+        }
+        Ok(())
+    }
+
+    fn timed_embed(&mut self) -> anyhow::Result<Tensor> {
+        let t = Instant::now();
+        let toks: Vec<i32> = self.seqs.iter().map(|s| s.last_token).collect();
+        let x = self.mr.embed(&toks)?;
+        self.charge(Phase::Embed, t.elapsed());
+        Ok(x)
+    }
+
+    fn charge(&mut self, phase: Phase, d: Duration) {
+        self.breakdown.add(phase, d);
+        self.clock.absorb_measured(d);
+    }
+
+    /// One decode step across the batch; returns the final activations
+    /// and the tokens committed (sampled, or forced if provided).
+    fn step(&mut self, forced: Option<&[i32]>) -> anyhow::Result<(Tensor, Vec<i32>)> {
+        let n_layers = self.spec.n_layers;
+        let mut x = self.timed_embed()?;
+
+        if self.cfg.policy.memory_resident() {
+            for layer in 0..n_layers {
+                x = self.route_layer(layer, x)?;
+            }
+        } else {
+            for layer in 0..n_layers {
+                // 1. complete this layer's loads
+                self.await_loads(layer)?;
+                // 2. overlap: predict + issue loads for layer l+1
+                if layer + 1 < n_layers {
+                    let x_snapshot = x.clone();
+                    self.predict_and_issue(layer + 1, &x_snapshot)?;
+                }
+                // 3. gather + attention for layer l
+                x = self.route_layer(layer, x)?;
+            }
+        }
+
+        // logits + sampling (teacher forcing overrides the argmax)
+        let t = Instant::now();
+        let (mut toks, _) = self.mr.logits_argmax(x.clone())?;
+        if let Some(f) = forced {
+            anyhow::ensure!(f.len() == toks.len(), "forced token batch mismatch");
+            toks.copy_from_slice(f);
+        }
+        self.charge(Phase::Logits, t.elapsed());
+
+        // append KV generated during this step (decode_block returned the
+        // per-layer k_new/v_new which compute_layer cached in pending_kv)
+        let t = Instant::now();
+        self.append_step_kv()?;
+        self.charge(Phase::KvAppend, t.elapsed());
+
+        for (s, &tok) in self.seqs.iter_mut().zip(&toks) {
+            s.last_token = tok;
+            s.pos += 1;
+            s.kv.n_tokens += 1;
+        }
+        self.tokens_generated += self.cfg.batch as u64;
+        self.steps_done += 1;
+        self.breakdown.steps = self.steps_done;
+
+        // issue layer-0 loads for the NEXT step using the new embedding
+        if !self.cfg.policy.memory_resident() {
+            let x0 = self.timed_embed()?;
+            self.predict_and_issue(0, &x0)?;
+            self.l0_inflight = true;
+        }
+        Ok((x, toks))
+    }
+
+    // pending per-step new KV rows: [layer][seq] -> (k_row, v_row)
+    fn append_step_kv(&mut self) -> anyhow::Result<()> {
+        let n_layers = self.spec.n_layers;
+        for layer in 0..n_layers {
+            for i in 0..self.seqs.len() {
+                let Some((k_row, v_row)) = self.seqs[i].pending_kv_take(layer) else {
+                    continue;
+                };
+                if self.cfg.policy.memory_resident() {
+                    self.seqs[i].mem[layer].push(&k_row, &v_row);
+                } else {
+                    let adapter = self.adapters[layer].clone();
+                    self.manager.append_token(
+                        &mut self.seqs[i].kv,
+                        layer,
+                        k_row,
+                        v_row,
+                        &adapter,
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // prediction + I/O issue
+
+    /// Predict layer `layer`'s critical entries from activations `x`
+    /// (the §3.3 online prediction), select, diff, and send loads.
+    fn predict_and_issue(&mut self, layer: usize, x: &Tensor) -> anyhow::Result<()> {
+        if matches!(self.cfg.policy, Policy::FlexGen) {
+            // no prediction: load everything
+            let t = Instant::now();
+            let mut per_seq = Vec::new();
+            for (i, su) in self.seqs.iter_mut().enumerate() {
+                let n_groups = su.kv.layers[layer].klr.len() / self.manager.cfg.group.max(1);
+                // one sequential extent covering all groups
+                let first = self.manager.layout.offset(su.kv.seq_slot, layer, 0);
+                let len = (n_groups as u64 * self.manager.layout.group_stride()) as usize;
+                if len > 0 {
+                    per_seq.push((
+                        i,
+                        vec![Extent {
+                            tag: u32::MAX,
+                            offset: first,
+                            len,
+                        }],
+                    ));
+                }
+                su.pending_sel[layer].clear();
+            }
+            self.charge(Phase::Select, t.elapsed());
+            self.send_loads(layer, per_seq);
+            return Ok(());
+        }
+
+        // ---- scores -----------------------------------------------------
+        let t = Instant::now();
+        let scores: Vec<Vec<f32>> = match &self.cfg.policy {
+            Policy::KvSwap => {
+                // the real path: HLO predict artifact over the compressed
+                // cache; the padded tensor is cached and synced
+                // incrementally (only freshly flushed rows are copied)
+                let b = self.cfg.batch;
+                let rank = self.rank;
+                let ncap = self.ncap;
+                let mut lens = Vec::with_capacity(b);
+                let mut pos = Vec::with_capacity(b);
+                for (i, su) in self.seqs.iter().enumerate() {
+                    let st = &su.kv.layers[layer];
+                    let n = st.klr.len().min(ncap);
+                    let synced = self.klr_synced[layer][i].min(n);
+                    if n > synced {
+                        let dst = self.klr_cache[layer].row_mut(&[i]);
+                        for row in synced..n {
+                            dst[row * rank..(row + 1) * rank]
+                                .copy_from_slice(st.klr.row(row));
+                        }
+                        self.klr_synced[layer][i] = n;
+                    }
+                    lens.push(n as i32);
+                    pos.push(su.pos as i32);
+                }
+                let k_lr = self.klr_cache[layer].clone();
+                let out = self.mr.predict_scores(
+                    layer,
+                    self.ncap,
+                    self.rank,
+                    x.clone(),
+                    k_lr,
+                    &lens,
+                    &pos,
+                )?;
+                (0..b).map(|i| out.row(&[i]).to_vec()).collect()
+            }
+            Policy::InfiniGen { .. } | Policy::Loki | Policy::ShadowKv { .. } => {
+                // baseline predictors score host-side with their adapter
+                self.seqs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, su)| {
+                        let st = &su.kv.layers[layer];
+                        let rows: Vec<&[f32]> =
+                            (0..st.klr.len()).map(|n| st.klr.row(n)).collect();
+                        self.host.predict_scores(
+                            layer,
+                            x.row(&[i]),
+                            &self.adapters[layer],
+                            &rows,
+                            su.pos as i32,
+                        )
+                    })
+                    .collect()
+            }
+            Policy::FlexGen | Policy::FullMemory => unreachable!(),
+        };
+        self.charge(Phase::Predict, t.elapsed());
+
+        // ---- selection ---------------------------------------------------
+        let t = Instant::now();
+        let g = self.manager.cfg.group;
+        let m_groups = self.manager.cfg.sel_region / g;
+        let mut per_seq_loads = Vec::new();
+        for (i, sc) in scores.iter().enumerate() {
+            let n_flushed = self.seqs[i].kv.layers[layer].klr.len();
+            let selection: Vec<u32> = match &self.cfg.policy {
+                Policy::InfiniGen {
+                    head_agg: false, ..
+                } => {
+                    // per-head selection: split the score budget per head
+                    // (scores here are head-summed; emulate per-head noise
+                    // by scoring each head separately on the host)
+                    let su = &self.seqs[i];
+                    let st = &su.kv.layers[layer];
+                    let rows: Vec<&[f32]> = (0..st.klr.len()).map(|n| st.klr.row(n)).collect();
+                    let head_scores = self.host.predict_scores_per_head(
+                        layer,
+                        x.row(&[i]),
+                        &self.adapters[layer],
+                        &rows,
+                        su.pos as i32,
+                    );
+                    let per_head =
+                        (self.manager.cfg.sel_region / self.spec.n_q_heads).max(1);
+                    let mut sel = predictor::select_tokens_per_head(
+                        &head_scores,
+                        n_flushed,
+                        per_head,
+                    );
+                    sel.truncate(m_groups);
+                    sel
+                }
+                _ => predictor::select_groups(sc, n_flushed, g, m_groups),
+            };
+            self.overlap[i][layer].record(&selection);
+
+            let loads = self.manager.plan_loads(&mut self.seqs[i].kv, layer, &selection);
+            let extents: Vec<Extent> = match &self.cfg.policy {
+                Policy::ShadowKv { .. } => loads
+                    .iter()
+                    .map(|l| Extent {
+                        // V half only: K is reconstructed from memory
+                        tag: l.gid,
+                        offset: l.offset + (g * self.spec.kv_flat_dim() * 4) as u64,
+                        len: g * self.spec.kv_flat_dim() * 4,
+                    })
+                    .collect(),
+                _ => loads
+                    .iter()
+                    .map(|l| Extent {
+                        tag: l.gid,
+                        offset: l.offset,
+                        len: l.len,
+                    })
+                    .collect(),
+            };
+            self.seqs[i].pending_sel[layer] = selection;
+            per_seq_loads.push((i, extents));
+        }
+        self.charge(Phase::Select, t.elapsed());
+        self.send_loads(layer, per_seq_loads);
+        Ok(())
+    }
+
+    fn send_loads(&mut self, layer: usize, per_seq: Vec<(usize, Vec<Extent>)>) {
+        self.issued_at = Some(Instant::now());
+        self.io_tx
+            .send(IoReq::Loads { layer, per_seq })
+            .expect("io thread gone");
+    }
+
+    fn await_loads(&mut self, layer: usize) -> anyhow::Result<()> {
+        let wait_t = Instant::now();
+        let resp = self.io_rx.recv().map_err(|_| anyhow::anyhow!("io thread gone"))?;
+        anyhow::ensure!(resp.layer == layer, "io pipeline out of order");
+        if layer == 0 {
+            self.l0_inflight = false;
+        }
+        if self.cfg.real_time {
+            // physical overlap: blocked time is the true stall
+            self.breakdown.add(Phase::IoWait, wait_t.elapsed());
+        } else {
+            // virtual overlap accounting (Appendix A.4): stall is the
+            // modeled I/O time not hidden by compute since issue
+            let since_issue = self
+                .issued_at
+                .map(|t| t.elapsed())
+                .unwrap_or(Duration::ZERO);
+            let stall = resp.io_time.saturating_sub(since_issue);
+            self.breakdown.add(Phase::IoWait, stall);
+            self.clock.advance(stall);
+        }
+        // commit payloads
+        let t = Instant::now();
+        for (seq_idx, results) in resp.per_seq {
+            for (tag, bytes) in results {
+                if tag == u32::MAX {
+                    // FlexGen whole-layer read: stage groups 0..n
+                    let stride = self.manager.layout.group_stride() as usize;
+                    let n = bytes.len() / stride;
+                    let su = &mut self.seqs[seq_idx];
+                    su.staging[layer].clear();
+                    for gi in 0..n {
+                        let rec = &bytes[gi * stride..gi * stride
+                            + self.manager.layout.group_payload_bytes() as usize];
+                        let (k, v) = self.manager.layout.decode_group(rec);
+                        let mut payload = k;
+                        payload.extend_from_slice(&v);
+                        su.staging[layer].insert(gi as u32, payload);
+                    }
+                } else if matches!(self.cfg.policy, Policy::ShadowKv { .. }) {
+                    // V-only payload: reconstruct K from the compressed cache
+                    let g = self.manager.cfg.group;
+                    let hd = self.spec.kv_flat_dim();
+                    let su = &mut self.seqs[seq_idx];
+                    let st = &mut su.kv.layers[layer];
+                    let mut payload = vec![0.0f32; 2 * g * hd];
+                    // K half: reconstruct rows tag*g..tag*g+g
+                    for m in 0..g {
+                        let tok = tag as usize * g + m;
+                        let klr_row = st.klr.row(tok).to_vec();
+                        let a = &self.adapters[layer];
+                        // k̂ = k_lr @ A^T
+                        for dim in 0..hd {
+                            let arow = &a.data[dim * a.shape[1]..(dim + 1) * a.shape[1]];
+                            payload[m * hd + dim] = mathx::dot(&klr_row, arow);
+                        }
+                    }
+                    // V half from disk
+                    for (j, c) in bytes.chunks_exact(4).enumerate() {
+                        payload[g * hd + j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
+                    if self.manager.cfg.reuse_slots == 0
+                        || st.reuse.insert(tag, &payload).is_none()
+                    {
+                        su.staging[layer].insert(tag, payload);
+                    }
+                } else {
+                    let su = &mut self.seqs[seq_idx];
+                    let staging = &mut su.staging[layer];
+                    self.manager.commit_load(&mut su.kv, layer, tag, &bytes, staging);
+                }
+            }
+        }
+        self.charge(Phase::ReuseMgmt, t.elapsed());
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // per-layer compute
+
+    fn compute_layer(&mut self, layer: usize, x: Tensor) -> anyhow::Result<Tensor> {
+        let (b, hkv, d, p) = (
+            self.cfg.batch,
+            self.spec.n_kv_heads,
+            self.spec.head_dim,
+            self.manager.cfg.p,
+        );
+        // gather into contiguous attention inputs via the mapping table
+        let t = Instant::now();
+        let mut k_sel = Tensor::zeros(&[b, hkv, p, d]);
+        let mut v_sel = Tensor::zeros(&[b, hkv, p, d]);
+        let mut mask = Tensor::zeros(&[b, p]);
+        for i in 0..b {
+            let selection = self.seqs[i].pending_sel[layer].clone();
+            let sm = self.manager.slot_map(&self.seqs[i].kv, layer, &selection);
+            let su = &mut self.seqs[i];
+            let staging = std::mem::take(&mut su.staging[layer]);
+            self.manager.assemble(
+                &mut su.kv,
+                layer,
+                &sm,
+                hkv,
+                d,
+                &staging,
+                k_sel.row_mut(&[i]),
+                v_sel.row_mut(&[i]),
+                mask.row_mut(&[i]),
+            );
+            if self.manager.cfg.reuse_slots == 0 {
+                // keep staging for potential reuse ablation semantics:
+                // without a reuse buffer, staging is dropped every step
+            }
+        }
+        self.charge(Phase::Gather, t.elapsed());
+
+        let t = Instant::now();
+        let pos: Vec<i32> = self.seqs.iter().map(|s| s.pos as i32).collect();
+        let artifact = format!("decode_p{p}");
+        let (x_next, k_new, v_new) =
+            self.mr
+                .decode_block(&artifact, layer, x, k_sel, v_sel, mask, &pos)?;
+        self.charge(Phase::Attention, t.elapsed());
+
+        // stash new KV for the post-logits append
+        let hd = self.spec.kv_flat_dim();
+        for i in 0..b {
+            let mut k_row = vec![0.0f32; hd];
+            let mut v_row = vec![0.0f32; hd];
+            for g in 0..hkv {
+                k_row[g * d..(g + 1) * d].copy_from_slice(k_new.row(&[i, g]));
+                v_row[g * d..(g + 1) * d].copy_from_slice(v_new.row(&[i, g]));
+            }
+            self.seqs[i].pending_kv_put(layer, k_row, v_row);
+        }
+        Ok(x_next)
+    }
+
+    fn full_attention_layer(
+        &mut self,
+        layer: usize,
+        x: Tensor,
+        from_mem: bool,
+    ) -> anyhow::Result<Tensor> {
+        let (b, hkv, d) = (self.cfg.batch, self.spec.n_kv_heads, self.spec.head_dim);
+        let hd = self.spec.kv_flat_dim();
+        let ncap_full = self.full_ncap()?;
+        let t = Instant::now();
+        let mut k_sel = Tensor::zeros(&[b, hkv, ncap_full, d]);
+        let mut v_sel = Tensor::zeros(&[b, hkv, ncap_full, d]);
+        let mut mask = Tensor::full(&[b, ncap_full], -1e9);
+        for i in 0..b {
+            let su = &mut self.seqs[i];
+            let n = su.pos.min(ncap_full);
+            if from_mem && self.cfg.policy.memory_resident() {
+                for tkn in 0..n {
+                    let krow = su.mem[layer].k_row(tkn).to_vec();
+                    let vrow = su.mem[layer].v_row(tkn).to_vec();
+                    for g in 0..hkv {
+                        let dst = g * ncap_full * d + tkn * d;
+                        k_sel.row_mut(&[i])[dst..dst + d]
+                            .copy_from_slice(&krow[g * d..(g + 1) * d]);
+                        v_sel.row_mut(&[i])[dst..dst + d]
+                            .copy_from_slice(&vrow[g * d..(g + 1) * d]);
+                    }
+                    mask.row_mut(&[i])[tkn] = 0.0;
+                }
+            } else {
+                // FlexGen: staged whole-layer disk image + rolling tail
+                let g_sz = self.manager.cfg.group;
+                let staging = &su.staging[layer];
+                let n_flushed = su.kv.layers[layer].klr.len();
+                for tkn in 0..n_flushed {
+                    let (gid, member) = self.manager.layout.locate(tkn);
+                    let Some(payload) = staging.get(&(gid as u32)) else {
+                        continue;
+                    };
+                    let krow = &payload[member * hd..(member + 1) * hd];
+                    let vrow = &payload[g_sz * hd + member * hd..g_sz * hd + (member + 1) * hd];
+                    for g in 0..hkv {
+                        let dst = g * ncap_full * d + tkn * d;
+                        k_sel.row_mut(&[i])[dst..dst + d]
+                            .copy_from_slice(&krow[g * d..(g + 1) * d]);
+                        v_sel.row_mut(&[i])[dst..dst + d]
+                            .copy_from_slice(&vrow[g * d..(g + 1) * d]);
+                    }
+                    mask.row_mut(&[i])[tkn] = 0.0;
+                }
+                let entries: Vec<(usize, Vec<f32>, Vec<f32>)> = su.kv.layers[layer]
+                    .rolling
+                    .visible_entries()
+                    .map(|(tp, k, v)| (tp, k.to_vec(), v.to_vec()))
+                    .collect();
+                for (tok_pos, krow, vrow) in entries {
+                    if tok_pos >= n_flushed && tok_pos < ncap_full {
+                        for g in 0..hkv {
+                            let dst = g * ncap_full * d + tok_pos * d;
+                            k_sel.row_mut(&[i])[dst..dst + d]
+                                .copy_from_slice(&krow[g * d..(g + 1) * d]);
+                            v_sel.row_mut(&[i])[dst..dst + d]
+                                .copy_from_slice(&vrow[g * d..(g + 1) * d]);
+                        }
+                        mask.row_mut(&[i])[tok_pos] = 0.0;
+                    }
+                }
+                su.staging[layer].clear();
+            }
+        }
+        self.charge(Phase::Gather, t.elapsed());
+
+        let t = Instant::now();
+        let pos: Vec<i32> = self.seqs.iter().map(|s| s.pos as i32).collect();
+        let artifact = format!("decode_full_n{ncap_full}");
+        let (x_next, k_new, v_new) =
+            self.mr
+                .decode_block(&artifact, layer, x, k_sel, v_sel, mask, &pos)?;
+        self.charge(Phase::Attention, t.elapsed());
+
+        for i in 0..b {
+            let mut k_row = vec![0.0f32; hd];
+            let mut v_row = vec![0.0f32; hd];
+            for g in 0..hkv {
+                k_row[g * d..(g + 1) * d].copy_from_slice(k_new.row(&[i, g]));
+                v_row[g * d..(g + 1) * d].copy_from_slice(v_new.row(&[i, g]));
+            }
+            self.seqs[i].pending_kv_put(layer, k_row, v_row);
+        }
+        Ok(x_next)
+    }
+
+    /// The decode_full artifact variant provisioned for this context.
+    fn full_ncap(&self) -> anyhow::Result<usize> {
+        let names = self
+            .mr
+            .rt
+            .manifest
+            .artifact_names(&self.cfg.preset, self.cfg.batch);
+        let mut best: Option<usize> = None;
+        for n in names {
+            if let Some(rest) = n.strip_prefix("decode_full_n") {
+                if let Ok(v) = rest.parse::<usize>() {
+                    if v >= self.cfg.max_context && best.map(|b| v < b).unwrap_or(true) {
+                        best = Some(v);
+                    }
+                }
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow::anyhow!(
+                "no decode_full artifact covers context {} for {}/b{}",
+                self.cfg.max_context,
+                self.cfg.preset,
+                self.cfg.batch
+            )
+        })
+    }
+}
+
+impl SeqUnit {
+    fn pending_kv_put(&mut self, layer: usize, k: Vec<f32>, v: Vec<f32>) {
+        if self.pending_kv.len() <= layer {
+            self.pending_kv.resize_with(layer + 1, || None);
+        }
+        self.pending_kv[layer] = Some((k, v));
+    }
+
+    fn pending_kv_take(&mut self, layer: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.pending_kv.get_mut(layer).and_then(|s| s.take())
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.io_tx.send(IoReq::Stop);
+        if let Some(h) = self._io_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// layer routing
+
+impl Engine {
+    /// Route a layer's compute through the right attention shape.
+    fn route_layer(&mut self, layer: usize, x: Tensor) -> anyhow::Result<Tensor> {
+        match self.cfg.policy {
+            Policy::FlexGen => self.full_attention_layer(layer, x, false),
+            Policy::FullMemory => self.full_attention_layer(layer, x, true),
+            _ => self.compute_layer(layer, x),
+        }
+    }
+}

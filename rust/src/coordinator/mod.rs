@@ -1,0 +1,11 @@
+//! Layer-3 coordinator: the decode engine (layer-pipelined, I/O-
+//! overlapped), the offloading policies, the dynamic batcher and the
+//! request router.
+
+pub mod batcher;
+pub mod engine;
+pub mod policy;
+pub mod router;
+
+pub use engine::{Engine, EngineConfig};
+pub use policy::Policy;

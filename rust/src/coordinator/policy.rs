@@ -1,0 +1,126 @@
+//! Offloading policies: KVSwap and every baseline the paper compares
+//! against (§4.2), expressed as variants of one decode engine so that
+//! disk, predictor, metrics and attention plumbing are shared and the
+//! comparisons are apples-to-apples.
+
+/// Which offloading scheme the engine runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// The paper's system: grouped prediction, compressed K cache,
+    /// rolling + reuse buffers, overlapped grouped disk loads.
+    KvSwap,
+    /// FlexGen [50]: full KV cache on disk, restored layer-by-layer each
+    /// step; full attention; no selection.
+    FlexGen,
+    /// InfiniGen [36] adapted to disk: per-token selection. `head_agg`
+    /// false = original per-head index selection (fragmented); true =
+    /// InfiniGen* (our head aggregation); `reuse` = InfiniGen*+ru.
+    InfiniGen { head_agg: bool, reuse: bool },
+    /// Loki [51]: token-granular selection with *dimension-selected* keys
+    /// (one-hot adapter) instead of SVD low-rank.
+    Loki,
+    /// ShadowKV [52] adapted to disk: conservative-rank K_lr kept in
+    /// memory and K *reconstructed* from it at attention time; V loaded
+    /// from disk at chunk granularity.
+    ShadowKv { chunk: usize, rank: usize },
+    /// vLLM-like upper bound: full KV resident in memory, no disk.
+    FullMemory,
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::KvSwap => "kvswap".into(),
+            Policy::FlexGen => "flexgen".into(),
+            Policy::InfiniGen {
+                head_agg: false, ..
+            } => "infinigen".into(),
+            Policy::InfiniGen {
+                head_agg: true,
+                reuse: false,
+            } => "infinigen*".into(),
+            Policy::InfiniGen {
+                head_agg: true,
+                reuse: true,
+            } => "infinigen*+ru".into(),
+            Policy::Loki => "loki".into(),
+            Policy::ShadowKv { .. } => "shadowkv".into(),
+            Policy::FullMemory => "vllm-like".into(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Policy> {
+        match name {
+            "kvswap" => Some(Policy::KvSwap),
+            "flexgen" => Some(Policy::FlexGen),
+            "infinigen" => Some(Policy::InfiniGen {
+                head_agg: false,
+                reuse: false,
+            }),
+            "infinigen*" => Some(Policy::InfiniGen {
+                head_agg: true,
+                reuse: false,
+            }),
+            "infinigen*+ru" => Some(Policy::InfiniGen {
+                head_agg: true,
+                reuse: true,
+            }),
+            "loki" => Some(Policy::Loki),
+            "shadowkv" => Some(Policy::ShadowKv { chunk: 8, rank: 32 }),
+            "vllm" | "vllm-like" | "full" => Some(Policy::FullMemory),
+            _ => None,
+        }
+    }
+
+    /// Does this policy keep the full KV cache in memory?
+    pub fn memory_resident(&self) -> bool {
+        matches!(self, Policy::FullMemory)
+    }
+
+    /// Does this policy use token-granular (G=1) disk access?
+    pub fn token_granular(&self) -> bool {
+        matches!(self, Policy::InfiniGen { .. } | Policy::Loki)
+    }
+
+    pub fn uses_reuse(&self) -> bool {
+        match self {
+            Policy::KvSwap => true,
+            Policy::InfiniGen { reuse, .. } => *reuse,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for n in [
+            "kvswap",
+            "flexgen",
+            "infinigen",
+            "infinigen*",
+            "infinigen*+ru",
+            "loki",
+            "shadowkv",
+            "vllm-like",
+        ] {
+            let p = Policy::by_name(n).unwrap();
+            assert_eq!(p.name(), n);
+        }
+        assert!(Policy::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Policy::FullMemory.memory_resident());
+        assert!(!Policy::KvSwap.memory_resident());
+        assert!(Policy::Loki.token_granular());
+        assert!(!Policy::KvSwap.token_granular());
+        assert!(Policy::KvSwap.uses_reuse());
+        assert!(!Policy::FlexGen.uses_reuse());
+        assert!(Policy::by_name("infinigen*+ru").unwrap().uses_reuse());
+    }
+}

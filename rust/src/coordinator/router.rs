@@ -1,0 +1,176 @@
+//! Request router: the serving front that owns the engine thread.
+//!
+//! `Engine` is deliberately single-threaded (PJRT handles live on one
+//! thread; the I/O thread is the engine's own). The router bridges:
+//! callers submit `Request`s from any thread; a dedicated engine thread
+//! batches them (Batcher), runs prefill + decode waves, and returns
+//! `Completion`s. Used by the TCP server example and the serve command.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::{Engine, EngineConfig};
+use crate::runtime::{Manifest, PjrtRuntime};
+use crate::workload::tracegen::{prompt_tokens, Request};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_ms: f64,
+    pub batch: usize,
+}
+
+enum RouterMsg {
+    Submit(Request),
+    Flush,
+    Stop,
+}
+
+pub struct Router {
+    tx: Sender<RouterMsg>,
+    rx: Receiver<Completion>,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl Router {
+    /// Spawn the engine thread. `artifacts_dir` is loaded inside the
+    /// thread (PJRT client must live there).
+    pub fn spawn(
+        artifacts_dir: std::path::PathBuf,
+        engine_cfg: EngineConfig,
+        batcher_cfg: BatcherConfig,
+    ) -> Router {
+        let (tx, req_rx) = channel::<RouterMsg>();
+        let (done_tx, rx) = channel::<Completion>();
+        let handle = std::thread::Builder::new()
+            .name("kvswap-router".into())
+            .spawn(move || -> anyhow::Result<()> {
+                let rt = std::rc::Rc::new(PjrtRuntime::new(Manifest::load(&artifacts_dir)?)?);
+                let mut batcher = Batcher::new(batcher_cfg);
+                let t0 = Instant::now();
+                let mut arrivals: std::collections::HashMap<u64, Instant> =
+                    std::collections::HashMap::new();
+                let mut flushing = false;
+                loop {
+                    // drain control messages (block only when queue empty
+                    // and not flushing)
+                    let msg = if batcher.queue_len() == 0 && !flushing {
+                        match req_rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => break,
+                        }
+                    } else {
+                        req_rx.try_recv().ok()
+                    };
+                    match msg {
+                        Some(RouterMsg::Submit(r)) => {
+                            arrivals.insert(r.id, Instant::now());
+                            batcher.push(r, t0.elapsed().as_secs_f64());
+                            continue; // look for more queued submissions
+                        }
+                        Some(RouterMsg::Flush) => flushing = true,
+                        Some(RouterMsg::Stop) => break,
+                        None => {}
+                    }
+                    let now = if flushing {
+                        f64::INFINITY // dispatch whatever is queued
+                    } else {
+                        t0.elapsed().as_secs_f64()
+                    };
+                    let Some(wave) = batcher.next_wave(now) else {
+                        if flushing && batcher.queue_len() == 0 {
+                            flushing = false;
+                        }
+                        continue;
+                    };
+
+                    // run the wave: shared context length (pad prompts to
+                    // the longest, multiple of the prefill chunk)
+                    let mut cfg = engine_cfg.clone();
+                    cfg.batch = wave.batch;
+                    let mut engine = Engine::new(rt.clone(), cfg)?;
+                    let chunk = rt.manifest.presets[&engine_cfg.preset].prefill_chunk;
+                    let vocab = rt.manifest.presets[&engine_cfg.preset].spec.vocab;
+                    let ctx_max = wave
+                        .requests
+                        .iter()
+                        .map(|r| r.context)
+                        .max()
+                        .unwrap_or(chunk)
+                        .div_ceil(chunk)
+                        * chunk;
+                    let mut prompts: Vec<Vec<i32>> = wave
+                        .requests
+                        .iter()
+                        .map(|r| {
+                            let mut p = prompt_tokens(r, vocab);
+                            p.resize(ctx_max, 0);
+                            p
+                        })
+                        .collect();
+                    while prompts.len() < wave.batch {
+                        prompts.push(vec![0; ctx_max]); // padding rows
+                    }
+                    let first = engine.prefill(&prompts)?;
+                    let steps = wave.requests.iter().map(|r| r.decode).max().unwrap_or(1);
+                    let (_, _, tok_hist) = engine.decode(steps.saturating_sub(1), false, None)?;
+
+                    for (row, req) in wave.requests.iter().enumerate() {
+                        let mut tokens = vec![first[row]];
+                        for step in tok_hist.iter().take(req.decode.saturating_sub(1)) {
+                            tokens.push(step[row]);
+                        }
+                        let latency_ms = arrivals
+                            .remove(&req.id)
+                            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                            .unwrap_or(0.0);
+                        if done_tx
+                            .send(Completion {
+                                id: req.id,
+                                tokens,
+                                latency_ms,
+                                batch: wave.batch,
+                            })
+                            .is_err()
+                        {
+                            return Ok(());
+                        }
+                    }
+                }
+                Ok(())
+            })
+            .expect("spawn router");
+        Router {
+            tx,
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn submit(&self, req: Request) {
+        let _ = self.tx.send(RouterMsg::Submit(req));
+    }
+
+    /// Dispatch all queued requests without waiting for full batches.
+    pub fn flush(&self) {
+        let _ = self.tx.send(RouterMsg::Flush);
+    }
+
+    pub fn recv(&self) -> Option<Completion> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<Completion> {
+        self.rx.recv_timeout(dur).ok()
+    }
+
+    pub fn stop(mut self) -> anyhow::Result<()> {
+        let _ = self.tx.send(RouterMsg::Stop);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("router thread panicked"))??;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,163 @@
+//! Storage backends: where offloaded KV bytes physically live.
+//!
+//! `MemBackend` keeps the "disk" contents in RAM (fast, used by tests and
+//! virtual-clock benches — the *timing* comes from the profile model, not
+//! the backend). `FileBackend` uses positional file I/O on a real file so
+//! the serving example exercises genuine storage syscalls.
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::Mutex;
+
+pub trait Backend: Send + Sync {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> anyhow::Result<()>;
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()>;
+    fn len(&self) -> u64;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Growable in-memory backing store.
+pub struct MemBackend {
+    data: Mutex<Vec<u8>>,
+}
+
+impl MemBackend {
+    pub fn new() -> MemBackend {
+        MemBackend {
+            data: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> MemBackend {
+        MemBackend {
+            data: Mutex::new(Vec::with_capacity(cap)),
+        }
+    }
+}
+
+impl Default for MemBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for MemBackend {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> anyhow::Result<()> {
+        let data = self.data.lock().unwrap();
+        let end = offset as usize + buf.len();
+        if end > data.len() {
+            anyhow::bail!(
+                "mem backend read past end: {}+{} > {}",
+                offset,
+                buf.len(),
+                data.len()
+            );
+        }
+        buf.copy_from_slice(&data[offset as usize..end]);
+        Ok(())
+    }
+
+    fn write_at(&self, offset: u64, src: &[u8]) -> anyhow::Result<()> {
+        let mut data = self.data.lock().unwrap();
+        let end = offset as usize + src.len();
+        if end > data.len() {
+            data.resize(end, 0);
+        }
+        data[offset as usize..end].copy_from_slice(src);
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.data.lock().unwrap().len() as u64
+    }
+}
+
+/// Real-file backing store (positional reads/writes, no seek contention).
+pub struct FileBackend {
+    file: File,
+    len: Mutex<u64>,
+}
+
+impl FileBackend {
+    pub fn create<P: AsRef<Path>>(path: P) -> anyhow::Result<FileBackend> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(FileBackend {
+            file,
+            len: Mutex::new(0),
+        })
+    }
+}
+
+impl Backend for FileBackend {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> anyhow::Result<()> {
+        self.file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        self.file.write_all_at(data, offset)?;
+        let mut len = self.len.lock().unwrap();
+        *len = (*len).max(offset + data.len() as u64);
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        *self.len.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(b: &dyn Backend) {
+        b.write_at(10, b"hello").unwrap();
+        b.write_at(0, b"01").unwrap();
+        let mut buf = [0u8; 5];
+        b.read_at(10, &mut buf).unwrap();
+        assert_eq!(&buf, b"hello");
+        let mut buf2 = [0u8; 2];
+        b.read_at(0, &mut buf2).unwrap();
+        assert_eq!(&buf2, b"01");
+        assert_eq!(b.len(), 15);
+    }
+
+    #[test]
+    fn mem_backend_roundtrip() {
+        roundtrip(&MemBackend::new());
+    }
+
+    #[test]
+    fn mem_backend_read_past_end_errors() {
+        let b = MemBackend::new();
+        b.write_at(0, b"xy").unwrap();
+        let mut buf = [0u8; 4];
+        assert!(b.read_at(0, &mut buf).is_err());
+    }
+
+    #[test]
+    fn file_backend_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("kvswap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("backend.bin");
+        roundtrip(&FileBackend::create(&path).unwrap());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mem_backend_gap_is_zero_filled() {
+        let b = MemBackend::new();
+        b.write_at(8, b"z").unwrap();
+        let mut buf = [1u8; 8];
+        b.read_at(0, &mut buf).unwrap();
+        assert_eq!(buf, [0u8; 8]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Disk substrate: device timing profiles (NVMe/eMMC/UFS/SD) with
+//! page-granule read amplification, byte backends (memory / real file),
+//! the `SimDisk` simulated device, and I/O statistics.
+//!
+//! Paper mapping: §2.3 (Fig. 2 bandwidth-vs-block-size behaviour) is
+//! produced by `DiskProfile`; every offloading policy's I/O goes through
+//! `SimDisk` so the benches can attribute logical/physical bytes and busy
+//! time uniformly.
+
+pub mod backend;
+pub mod profile;
+pub mod sim;
+pub mod stats;
+
+pub use backend::{Backend, FileBackend, MemBackend};
+pub use profile::DiskProfile;
+pub use sim::SimDisk;
+pub use stats::{DiskSnapshot, DiskStats};

@@ -1,0 +1,191 @@
+//! Storage-device timing profiles.
+//!
+//! The paper's testbed has real NVMe (1.8 GB/s) and eMMC (250 MB/s)
+//! devices; UFS is "similar to NVMe" (paper footnote 2). We model a
+//! device by: peak bandwidth, per-operation setup latency, and a physical
+//! access granule (NAND page / controller read unit). The controller
+//! reads whole granules ("read amplification", paper §1 & [27,45]), so
+//! effective bandwidth collapses for small requests — this model
+//! reproduces the shape of the paper's Fig. 2 directly (see
+//! `benches/fig2_bandwidth.rs`).
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskProfile {
+    pub name: &'static str,
+    /// Peak sustained read bandwidth, bytes/second.
+    pub read_bw: f64,
+    /// Peak sustained write bandwidth, bytes/second.
+    pub write_bw: f64,
+    /// Per-operation setup latency (command issue + device latency).
+    pub op_latency: Duration,
+    /// Physical read granule: a request touching any byte of a granule
+    /// pays for the whole granule.
+    pub page_bytes: u64,
+    /// Native command queue depth: how many outstanding ops the device
+    /// overlaps (NVMe NCQ >= 16; eMMC CQE ~4; SD none).
+    pub queue_depth: u32,
+}
+
+impl DiskProfile {
+    pub fn nvme() -> DiskProfile {
+        DiskProfile {
+            name: "nvme",
+            read_bw: 1.8e9,
+            write_bw: 1.2e9,
+            op_latency: Duration::from_micros(80),
+            page_bytes: 4096,
+            queue_depth: 16,
+        }
+    }
+
+    pub fn emmc() -> DiskProfile {
+        DiskProfile {
+            name: "emmc",
+            read_bw: 250e6,
+            write_bw: 120e6,
+            op_latency: Duration::from_micros(250),
+            page_bytes: 16384,
+            queue_depth: 4,
+        }
+    }
+
+    /// UFS: paper footnote 2 — "I/O bandwidth and characteristics similar
+    /// to NVMe", slightly lower peak.
+    pub fn ufs() -> DiskProfile {
+        DiskProfile {
+            name: "ufs",
+            read_bw: 1.2e9,
+            write_bw: 0.8e9,
+            op_latency: Duration::from_micros(120),
+            page_bytes: 4096,
+            queue_depth: 8,
+        }
+    }
+
+    /// SD-card class (the paper's "<200 MB/s low-bandwidth device" regime).
+    pub fn sd() -> DiskProfile {
+        DiskProfile {
+            name: "sd",
+            read_bw: 90e6,
+            write_bw: 40e6,
+            op_latency: Duration::from_micros(600),
+            page_bytes: 32768,
+            queue_depth: 1,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DiskProfile> {
+        match name {
+            "nvme" => Some(Self::nvme()),
+            "emmc" => Some(Self::emmc()),
+            "ufs" => Some(Self::ufs()),
+            "sd" => Some(Self::sd()),
+            _ => None,
+        }
+    }
+
+    /// Physical bytes actually moved for a logical read [offset, offset+len):
+    /// whole granules touched (read amplification).
+    pub fn physical_bytes(&self, offset: u64, len: u64) -> u64 {
+        if len == 0 {
+            return 0;
+        }
+        let first = offset / self.page_bytes;
+        let last = (offset + len - 1) / self.page_bytes;
+        (last - first + 1) * self.page_bytes
+    }
+
+    /// Modeled duration of one read op.
+    pub fn read_time(&self, offset: u64, len: u64) -> Duration {
+        let phys = self.physical_bytes(offset, len);
+        self.op_latency + Duration::from_secs_f64(phys as f64 / self.read_bw)
+    }
+
+    /// Modeled duration of one write op (writes are granule-aligned too).
+    pub fn write_time(&self, offset: u64, len: u64) -> Duration {
+        let phys = self.physical_bytes(offset, len);
+        self.op_latency + Duration::from_secs_f64(phys as f64 / self.write_bw)
+    }
+
+    /// Modeled duration of `n` independent read ops of `len` bytes each
+    /// issued together: the device overlaps command latency across its
+    /// native queue depth, transfers serialize on the bus.
+    pub fn batched_read_time(&self, total_phys: u64, n_ops: u64) -> Duration {
+        if n_ops == 0 {
+            return Duration::ZERO;
+        }
+        let waves = n_ops.div_ceil(self.queue_depth.max(1) as u64);
+        self.op_latency * waves as u32
+            + Duration::from_secs_f64(total_phys as f64 / self.read_bw)
+    }
+
+    /// Effective bandwidth for aligned reads of `block` bytes — the
+    /// quantity Fig. 2 plots (normalized to `read_bw`).
+    pub fn effective_read_bw(&self, block: u64) -> f64 {
+        let t = self.read_time(0, block);
+        block as f64 / t.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn physical_bytes_rounds_to_pages() {
+        let p = DiskProfile::nvme(); // 4K pages
+        assert_eq!(p.physical_bytes(0, 1), 4096);
+        assert_eq!(p.physical_bytes(0, 4096), 4096);
+        assert_eq!(p.physical_bytes(0, 4097), 8192);
+        assert_eq!(p.physical_bytes(4095, 2), 8192); // straddles boundary
+        assert_eq!(p.physical_bytes(8192, 4096), 4096);
+        assert_eq!(p.physical_bytes(100, 0), 0);
+    }
+
+    #[test]
+    fn small_reads_waste_bandwidth() {
+        // Paper §2.3: at 512 B (one KV entry) effective bandwidth is <6%
+        // of peak for both NVMe and eMMC.
+        for p in [DiskProfile::nvme(), DiskProfile::emmc()] {
+            let frac = p.effective_read_bw(512) / p.read_bw;
+            assert!(frac < 0.06, "{}: {frac}", p.name);
+        }
+    }
+
+    #[test]
+    fn large_reads_approach_peak() {
+        for p in [DiskProfile::nvme(), DiskProfile::emmc(), DiskProfile::ufs()] {
+            let frac = p.effective_read_bw(8 * 1024 * 1024) / p.read_bw;
+            assert!(frac > 0.85, "{}: {frac}", p.name);
+        }
+    }
+
+    #[test]
+    fn effective_bw_monotone_in_block_size() {
+        let p = DiskProfile::emmc();
+        let mut prev = 0.0;
+        for shift in 9..24 {
+            let bw = p.effective_read_bw(1 << shift);
+            assert!(bw >= prev);
+            prev = bw;
+        }
+    }
+
+    #[test]
+    fn nvme_much_faster_than_emmc() {
+        let n = DiskProfile::nvme();
+        let e = DiskProfile::emmc();
+        let tn = n.read_time(0, 1 << 20).as_secs_f64();
+        let te = e.read_time(0, 1 << 20).as_secs_f64();
+        assert!(te / tn > 4.0);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(DiskProfile::by_name("nvme").unwrap().name, "nvme");
+        assert_eq!(DiskProfile::by_name("sd").unwrap().page_bytes, 32768);
+        assert!(DiskProfile::by_name("floppy").is_none());
+    }
+}

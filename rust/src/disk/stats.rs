@@ -1,0 +1,142 @@
+//! Disk I/O statistics: logical vs physical byte counts (read
+//! amplification), op counts and busy time. Lock-free atomics — the
+//! prefetch thread updates these from the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct DiskStats {
+    read_ops: AtomicU64,
+    write_ops: AtomicU64,
+    logical_read: AtomicU64,
+    physical_read: AtomicU64,
+    logical_write: AtomicU64,
+    physical_write: AtomicU64,
+    read_busy_ns: AtomicU64,
+    write_busy_ns: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiskSnapshot {
+    pub read_ops: u64,
+    pub write_ops: u64,
+    pub logical_read_bytes: u64,
+    pub physical_read_bytes: u64,
+    pub logical_write_bytes: u64,
+    pub physical_write_bytes: u64,
+    pub read_busy: Duration,
+    pub write_busy: Duration,
+}
+
+impl DiskStats {
+    pub fn record_read(&self, logical: u64, physical: u64, dur: Duration) {
+        self.read_ops.fetch_add(1, Ordering::Relaxed);
+        self.logical_read.fetch_add(logical, Ordering::Relaxed);
+        self.physical_read.fetch_add(physical, Ordering::Relaxed);
+        self.read_busy_ns
+            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// One batched read of `ops` extents (queue-depth overlapped).
+    pub fn record_batch_read(&self, ops: u64, logical: u64, physical: u64, dur: Duration) {
+        self.read_ops.fetch_add(ops, Ordering::Relaxed);
+        self.logical_read.fetch_add(logical, Ordering::Relaxed);
+        self.physical_read.fetch_add(physical, Ordering::Relaxed);
+        self.read_busy_ns
+            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_write(&self, logical: u64, physical: u64, dur: Duration) {
+        self.write_ops.fetch_add(1, Ordering::Relaxed);
+        self.logical_write.fetch_add(logical, Ordering::Relaxed);
+        self.physical_write.fetch_add(physical, Ordering::Relaxed);
+        self.write_busy_ns
+            .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> DiskSnapshot {
+        DiskSnapshot {
+            read_ops: self.read_ops.load(Ordering::Relaxed),
+            write_ops: self.write_ops.load(Ordering::Relaxed),
+            logical_read_bytes: self.logical_read.load(Ordering::Relaxed),
+            physical_read_bytes: self.physical_read.load(Ordering::Relaxed),
+            logical_write_bytes: self.logical_write.load(Ordering::Relaxed),
+            physical_write_bytes: self.physical_write.load(Ordering::Relaxed),
+            read_busy: Duration::from_nanos(self.read_busy_ns.load(Ordering::Relaxed)),
+            write_busy: Duration::from_nanos(self.write_busy_ns.load(Ordering::Relaxed)),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.read_ops.store(0, Ordering::Relaxed);
+        self.write_ops.store(0, Ordering::Relaxed);
+        self.logical_read.store(0, Ordering::Relaxed);
+        self.physical_read.store(0, Ordering::Relaxed);
+        self.logical_write.store(0, Ordering::Relaxed);
+        self.physical_write.store(0, Ordering::Relaxed);
+        self.read_busy_ns.store(0, Ordering::Relaxed);
+        self.write_busy_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+impl DiskSnapshot {
+    /// Fraction of physically-moved read bytes that were actually wanted
+    /// (1.0 = no read amplification).
+    pub fn read_amplification_efficiency(&self) -> f64 {
+        if self.physical_read_bytes == 0 {
+            return 1.0;
+        }
+        self.logical_read_bytes as f64 / self.physical_read_bytes as f64
+    }
+
+    /// Effective bandwidth relative to `peak_bw` over the busy period —
+    /// the "I/O utilization" the paper annotates in Fig. 12.
+    pub fn io_utilization(&self, peak_bw: f64) -> f64 {
+        let secs = self.read_busy.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        (self.logical_read_bytes as f64 / secs) / peak_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_reset() {
+        let s = DiskStats::default();
+        s.record_read(512, 4096, Duration::from_micros(100));
+        s.record_read(512, 4096, Duration::from_micros(100));
+        s.record_write(1024, 4096, Duration::from_micros(50));
+        let snap = s.snapshot();
+        assert_eq!(snap.read_ops, 2);
+        assert_eq!(snap.logical_read_bytes, 1024);
+        assert_eq!(snap.physical_read_bytes, 8192);
+        assert_eq!(snap.write_ops, 1);
+        assert_eq!(snap.read_busy, Duration::from_micros(200));
+        s.reset();
+        assert_eq!(s.snapshot().read_ops, 0);
+    }
+
+    #[test]
+    fn amplification_efficiency() {
+        let s = DiskStats::default();
+        s.record_read(512, 4096, Duration::from_micros(10));
+        assert!((s.snapshot().read_amplification_efficiency() - 0.125).abs() < 1e-9);
+        let empty = DiskStats::default();
+        assert_eq!(empty.snapshot().read_amplification_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn io_utilization() {
+        let s = DiskStats::default();
+        // 1 MiB in 1 ms against a 2 GB/s device => ~52% utilization
+        s.record_read(1 << 20, 1 << 20, Duration::from_millis(1));
+        let u = s.snapshot().io_utilization(2e9);
+        assert!((u - (1 << 20) as f64 / 1e-3 / 2e9).abs() < 1e-9);
+        assert_eq!(DiskStats::default().snapshot().io_utilization(2e9), 0.0);
+    }
+}

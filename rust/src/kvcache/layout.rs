@@ -1,0 +1,194 @@
+//! On-disk KV cache layout.
+//!
+//! The full KV cache lives on disk (paper §3: "stores the complete KV
+//! cache on disk"). Entries are stored in *groups* of G consecutive
+//! tokens so one prediction group = one contiguous disk extent, aligned
+//! to the storage page granule — this is the paper's core I/O design
+//! (§3.3: "groups G consecutive KV entries to align with the block-read
+//! characteristics").
+//!
+//! Group record layout (row-major f32):
+//!   [ K rows: G x (Hkv*d) | V rows: G x (Hkv*d) ]
+//! padded up to the next multiple of `page_align` bytes.
+//!
+//! Address = seq_slot * seq_stride + layer * layer_stride + group * gstride.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskLayout {
+    /// Flattened KV row size (Hkv * d floats).
+    pub hd: usize,
+    /// Tokens per group (G).
+    pub group: usize,
+    /// Max groups per (seq, layer) — capacity for max context.
+    pub max_groups: usize,
+    /// Number of layers.
+    pub n_layers: usize,
+    /// Group record alignment in bytes (storage page granule).
+    pub page_align: u64,
+}
+
+impl DiskLayout {
+    pub fn new(
+        hd: usize,
+        group: usize,
+        max_context: usize,
+        n_layers: usize,
+        page_align: u64,
+    ) -> DiskLayout {
+        DiskLayout {
+            hd,
+            group,
+            max_groups: max_context.div_ceil(group),
+            n_layers,
+            page_align,
+        }
+    }
+
+    /// Payload bytes of one group record (K+V rows).
+    pub fn group_payload_bytes(&self) -> u64 {
+        (2 * self.group * self.hd * 4) as u64
+    }
+
+    /// On-disk stride of one group record (payload padded to page align).
+    pub fn group_stride(&self) -> u64 {
+        let p = self.group_payload_bytes();
+        if self.page_align == 0 {
+            p
+        } else {
+            p.div_ceil(self.page_align) * self.page_align
+        }
+    }
+
+    pub fn layer_stride(&self) -> u64 {
+        self.max_groups as u64 * self.group_stride()
+    }
+
+    pub fn seq_stride(&self) -> u64 {
+        self.n_layers as u64 * self.layer_stride()
+    }
+
+    /// Disk offset of a group record.
+    pub fn offset(&self, seq_slot: usize, layer: usize, group_idx: usize) -> u64 {
+        assert!(layer < self.n_layers, "layer {layer}");
+        assert!(
+            group_idx < self.max_groups,
+            "group {group_idx} >= {}",
+            self.max_groups
+        );
+        seq_slot as u64 * self.seq_stride()
+            + layer as u64 * self.layer_stride()
+            + group_idx as u64 * self.group_stride()
+    }
+
+    /// Which group holds token `t`, and its index within the group.
+    pub fn locate(&self, token: usize) -> (usize, usize) {
+        (token / self.group, token % self.group)
+    }
+
+    /// Serialize one group's K/V rows into a disk record (payload only).
+    pub fn encode_group(&self, k_rows: &[f32], v_rows: &[f32]) -> Vec<u8> {
+        assert_eq!(k_rows.len(), self.group * self.hd);
+        assert_eq!(v_rows.len(), self.group * self.hd);
+        let mut out = Vec::with_capacity(self.group_payload_bytes() as usize);
+        for v in k_rows.iter().chain(v_rows.iter()) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode a group record into (k_rows, v_rows).
+    pub fn decode_group(&self, bytes: &[u8]) -> (Vec<f32>, Vec<f32>) {
+        let n = self.group * self.hd;
+        assert!(bytes.len() >= 2 * n * 4, "short group record");
+        let mut vals = bytes
+            .chunks_exact(4)
+            .take(2 * n)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        let k: Vec<f32> = vals.by_ref().take(n).collect();
+        let v: Vec<f32> = vals.collect();
+        (k, v)
+    }
+
+    /// Total disk footprint of `n_seqs` sequences.
+    pub fn total_bytes(&self, n_seqs: usize) -> u64 {
+        n_seqs as u64 * self.seq_stride()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn layout() -> DiskLayout {
+        DiskLayout::new(128, 4, 2048, 4, 4096)
+    }
+
+    #[test]
+    fn group_sizes_page_aligned() {
+        let l = layout();
+        assert_eq!(l.group_payload_bytes(), 4096); // 4*2*128*4
+        assert_eq!(l.group_stride(), 4096);
+        // eMMC-style 16K alignment pads
+        let l2 = DiskLayout::new(128, 4, 2048, 4, 16384);
+        assert_eq!(l2.group_stride(), 16384);
+        // no alignment
+        let l3 = DiskLayout::new(128, 3, 2048, 4, 0);
+        assert_eq!(l3.group_stride(), l3.group_payload_bytes());
+    }
+
+    #[test]
+    fn offsets_disjoint_and_ordered() {
+        let l = layout();
+        assert_eq!(l.offset(0, 0, 0), 0);
+        assert_eq!(l.offset(0, 0, 1), l.group_stride());
+        assert_eq!(l.offset(0, 1, 0), l.layer_stride());
+        assert_eq!(l.offset(1, 0, 0), l.seq_stride());
+        assert_eq!(l.max_groups, 512);
+    }
+
+    #[test]
+    fn locate_tokens() {
+        let l = layout();
+        assert_eq!(l.locate(0), (0, 0));
+        assert_eq!(l.locate(3), (0, 3));
+        assert_eq!(l.locate(4), (1, 0));
+        assert_eq!(l.locate(11), (2, 3));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let l = layout();
+        let n = l.group * l.hd;
+        let k: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let v: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let rec = l.encode_group(&k, &v);
+        assert_eq!(rec.len() as u64, l.group_payload_bytes());
+        let (k2, v2) = l.decode_group(&rec);
+        assert_eq!(k2, k);
+        assert_eq!(v2, v);
+    }
+
+    #[test]
+    fn prop_no_two_records_overlap() {
+        proptest::check("layout-disjoint", 100, |rng| {
+            let hd = [32, 64, 128][rng.below(3)];
+            let g = [1, 2, 4, 8][rng.below(4)];
+            let layers = rng.range(1, 6);
+            let l = DiskLayout::new(hd, g, 256, layers, [0u64, 512, 4096][rng.below(3)]);
+            // two random distinct records
+            let a = (rng.below(3), rng.below(layers), rng.below(l.max_groups));
+            let b = (rng.below(3), rng.below(layers), rng.below(l.max_groups));
+            if a == b {
+                return Ok(());
+            }
+            let (oa, ob) = (l.offset(a.0, a.1, a.2), l.offset(b.0, b.1, b.2));
+            let s = l.group_stride();
+            crate::prop_assert!(
+                oa + s <= ob || ob + s <= oa,
+                "records overlap: {a:?}@{oa} vs {b:?}@{ob} stride {s}"
+            );
+            Ok(())
+        });
+    }
+}

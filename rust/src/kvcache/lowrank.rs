@@ -1,0 +1,132 @@
+//! Compressed K-cache store (paper §3.2): per (sequence, layer) rows of
+//! `K_lr = flatten(K) @ A`, rank r. This is the *only* per-token
+//! in-memory state KVSwap keeps — it is what makes prediction feasible
+//! without the full K cache. Appended group-wise when the rolling buffer
+//! flushes; read as a padded [ncap, r] tensor for the predict artifact.
+
+use crate::runtime::tensor::Tensor;
+use crate::util::mathx;
+
+#[derive(Debug, Clone)]
+pub struct LowRankStore {
+    rank: usize,
+    rows: Vec<f32>,
+    n: usize,
+}
+
+impl LowRankStore {
+    pub fn new(rank: usize) -> LowRankStore {
+        LowRankStore {
+            rank,
+            rows: Vec::new(),
+            n: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Compress and append `count` K rows (each `hd` floats) with adapter
+    /// A [hd, rank] (row-major).
+    pub fn append_compressed(&mut self, k_rows: &[f32], hd: usize, adapter: &Tensor) {
+        assert_eq!(adapter.shape, vec![hd, self.rank]);
+        assert_eq!(k_rows.len() % hd, 0);
+        let count = k_rows.len() / hd;
+        let old_len = self.rows.len();
+        self.rows.resize(old_len + count * self.rank, 0.0);
+        mathx::matmul(
+            k_rows,
+            &adapter.data,
+            count,
+            hd,
+            self.rank,
+            &mut self.rows[old_len..],
+        );
+        self.n += count;
+    }
+
+    /// Append already-compressed rows.
+    pub fn append_raw(&mut self, rows: &[f32]) {
+        assert_eq!(rows.len() % self.rank, 0);
+        self.rows.extend_from_slice(rows);
+        self.n += rows.len() / self.rank;
+    }
+
+    /// Overwrite one compressed row in place (needle planting).
+    pub fn patch_row(&mut self, i: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.rank);
+        assert!(i < self.n, "patch_row {i} >= {}", self.n);
+        self.rows[i * self.rank..(i + 1) * self.rank].copy_from_slice(row);
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.rank..(i + 1) * self.rank]
+    }
+
+    /// Copy into a zero-padded [ncap, rank] destination slice (one batch
+    /// row of the predict artifact's k_lr input).
+    pub fn fill_padded(&self, dst: &mut [f32], ncap: usize) {
+        assert_eq!(dst.len(), ncap * self.rank);
+        let n = self.n.min(ncap);
+        dst[..n * self.rank].copy_from_slice(&self.rows[..n * self.rank]);
+        dst[n * self.rank..].fill(0.0);
+    }
+
+    /// Memory footprint in bytes.
+    pub fn bytes(&self) -> u64 {
+        (self.rows.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_compressed_matches_matmul() {
+        let hd = 4;
+        let rank = 2;
+        // adapter columns = selector of dims 0 and 2
+        let adapter = Tensor::from_vec(
+            &[hd, rank],
+            vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0],
+        );
+        let mut s = LowRankStore::new(rank);
+        let k_rows = vec![
+            1.0, 2.0, 3.0, 4.0, // row 0
+            5.0, 6.0, 7.0, 8.0, // row 1
+        ];
+        s.append_compressed(&k_rows, hd, &adapter);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[1.0, 3.0]);
+        assert_eq!(s.row(1), &[5.0, 7.0]);
+    }
+
+    #[test]
+    fn fill_padded_zero_tail() {
+        let mut s = LowRankStore::new(2);
+        s.append_raw(&[1.0, 2.0, 3.0, 4.0]);
+        let mut dst = vec![9.0; 8];
+        s.fill_padded(&mut dst, 4);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn incremental_appends_accumulate() {
+        let mut s = LowRankStore::new(3);
+        s.append_raw(&[1.0; 3]);
+        s.append_raw(&[2.0; 6]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.row(2), &[2.0; 3]);
+        assert_eq!(s.bytes(), 36);
+    }
+}

@@ -1,0 +1,459 @@
+//! KV-cache manager (paper §3.4.4): owns all per-sequence KV state —
+//! the on-disk full cache, the in-memory compressed K cache, rolling and
+//! reuse buffers — and assembles the contiguous attention inputs through
+//! the mapping table.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::layout::DiskLayout;
+use super::lowrank::LowRankStore;
+use super::mapping::{SlotMap, SlotSource};
+use super::reuse::ReuseBuffer;
+use super::rolling::{FlushedGroup, RollingBuffer};
+use crate::disk::SimDisk;
+use crate::runtime::tensor::Tensor;
+
+/// Per-(sequence, layer) KV state.
+pub struct LayerState {
+    pub klr: LowRankStore,
+    pub rolling: RollingBuffer,
+    pub reuse: ReuseBuffer,
+    /// Selection used for the step in flight (for overlap stats).
+    pub last_selection: Vec<u32>,
+}
+
+/// Per-sequence KV state across layers.
+pub struct SeqState {
+    pub seq_slot: usize,
+    /// Total tokens in context (flushed + rolling pending).
+    pub n_tokens: usize,
+    pub layers: Vec<LayerState>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ManagerConfig {
+    pub group: usize,
+    pub rank: usize,
+    pub reuse_slots: usize,
+    pub rb_visible: usize,
+    /// Attention slots reserved for selected groups (M*G).
+    pub sel_region: usize,
+    /// Total attention width P.
+    pub p: usize,
+    /// Insert freshly flushed groups straight into the reuse buffer
+    /// (avoids an immediate disk round-trip when they get selected).
+    pub cache_flushed: bool,
+    /// Expose rolling-buffer entries to attention. Disabling this is the
+    /// paper's App. Tab. 3 ablation: fresh entries stay invisible until
+    /// their group flushes AND the predictor selects it.
+    pub expose_rolling: bool,
+}
+
+pub struct KvManager {
+    pub layout: DiskLayout,
+    pub disk: Arc<SimDisk>,
+    pub cfg: ManagerConfig,
+}
+
+/// A pending disk load for one group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupLoad {
+    pub gid: u32,
+    pub offset: u64,
+    pub len: usize,
+}
+
+impl KvManager {
+    pub fn new(layout: DiskLayout, disk: Arc<SimDisk>, cfg: ManagerConfig) -> KvManager {
+        assert!(cfg.sel_region % cfg.group == 0, "sel_region must be a multiple of G");
+        assert!(cfg.sel_region + cfg.rb_visible <= cfg.p);
+        KvManager { layout, disk, cfg }
+    }
+
+    pub fn new_seq(&self, seq_slot: usize) -> SeqState {
+        let hd = self.layout.hd;
+        SeqState {
+            seq_slot,
+            n_tokens: 0,
+            layers: (0..self.layout.n_layers)
+                .map(|_| LayerState {
+                    klr: LowRankStore::new(self.cfg.rank),
+                    rolling: RollingBuffer::new(hd, self.cfg.group, self.cfg.rb_visible),
+                    reuse: ReuseBuffer::new(
+                        self.cfg.reuse_slots,
+                        2 * self.cfg.group * hd,
+                    ),
+                    last_selection: Vec::new(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Ingest one layer's prefill KV (token-major rows, post-RoPE):
+    /// writes complete groups to disk (layer-by-layer streaming, §3.4),
+    /// builds the initial compressed K cache, and parks the tail in the
+    /// rolling buffer. `adapter` is this layer's A [hd, rank].
+    pub fn ingest_prefill(
+        &self,
+        seq: &mut SeqState,
+        layer: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        adapter: &Tensor,
+    ) -> anyhow::Result<()> {
+        let hd = self.layout.hd;
+        let g = self.cfg.group;
+        assert_eq!(k_rows.len(), v_rows.len());
+        assert_eq!(k_rows.len() % hd, 0);
+        let n = k_rows.len() / hd;
+        let full_groups = n / g;
+        for gi in 0..full_groups {
+            let span = gi * g * hd..(gi + 1) * g * hd;
+            let rec = self.layout.encode_group(&k_rows[span.clone()], &v_rows[span]);
+            let off = self.layout.offset(seq.seq_slot, layer, gi);
+            self.disk.write(off, &rec)?;
+        }
+        let st = &mut seq.layers[layer];
+        st.klr
+            .append_compressed(&k_rows[..full_groups * g * hd], hd, adapter);
+        let tail_k: Vec<Vec<f32>> = (full_groups * g..n)
+            .map(|t| k_rows[t * hd..(t + 1) * hd].to_vec())
+            .collect();
+        let tail_v: Vec<Vec<f32>> = (full_groups * g..n)
+            .map(|t| v_rows[t * hd..(t + 1) * hd].to_vec())
+            .collect();
+        st.rolling.init_tail(full_groups * g, tail_k, tail_v);
+        if layer == self.layout.n_layers - 1 {
+            seq.n_tokens = n;
+        }
+        Ok(())
+    }
+
+    /// Append a freshly generated KV entry for one layer; on group
+    /// completion offloads to disk + extends K_lr (+ optionally seeds the
+    /// reuse buffer). Returns the flushed group id if any.
+    pub fn append_token(
+        &self,
+        seq: &mut SeqState,
+        layer: usize,
+        k_row: Vec<f32>,
+        v_row: Vec<f32>,
+        adapter: &Tensor,
+    ) -> anyhow::Result<Option<u32>> {
+        let hd = self.layout.hd;
+        let st = &mut seq.layers[layer];
+        let flushed: Option<FlushedGroup> = st.rolling.push(k_row, v_row);
+        let Some(fg) = flushed else {
+            return Ok(None);
+        };
+        let rec = self.layout.encode_group(&fg.k_rows, &fg.v_rows);
+        let off = self.layout.offset(seq.seq_slot, layer, fg.group_idx);
+        self.disk.write(off, &rec)?;
+        st.klr.append_compressed(&fg.k_rows, hd, adapter);
+        if self.cfg.cache_flushed && self.cfg.reuse_slots > 0 {
+            let mut payload = fg.k_rows.clone();
+            payload.extend_from_slice(&fg.v_rows);
+            st.reuse.insert(fg.group_idx as u32, &payload);
+        }
+        Ok(Some(fg.group_idx as u32))
+    }
+
+    /// Diff a selection against the reuse buffer: which groups need disk
+    /// loads. Counts reuse hits/misses (paper Tab. 5 statistics) and pins
+    /// the selection so this step's inserts cannot evict its own hits.
+    pub fn plan_loads(&self, seq: &mut SeqState, layer: usize, selection: &[u32]) -> Vec<GroupLoad> {
+        let seq_slot = seq.seq_slot;
+        let st = &mut seq.layers[layer];
+        st.reuse.unpin_all();
+        st.reuse.pin_many(selection);
+        let len = self.layout.group_payload_bytes() as usize;
+        selection
+            .iter()
+            .filter(|gid| st.reuse.lookup(**gid).is_none())
+            .map(|&gid| GroupLoad {
+                gid,
+                offset: self.layout.offset(seq_slot, layer, gid as usize),
+                len,
+            })
+            .collect()
+    }
+
+    /// Insert a completed disk load into the reuse buffer (or return it
+    /// for staging when reuse is disabled).
+    pub fn commit_load(
+        &self,
+        seq: &mut SeqState,
+        layer: usize,
+        gid: u32,
+        bytes: &[u8],
+        staging: &mut HashMap<u32, Vec<f32>>,
+    ) {
+        let (k, v) = self.layout.decode_group(bytes);
+        let mut payload = k;
+        payload.extend_from_slice(&v);
+        let st = &mut seq.layers[layer];
+        if self.cfg.reuse_slots == 0 || st.reuse.insert(gid, &payload).is_none() {
+            // reuse disabled or all slots pinned: stage for this step only
+            staging.insert(gid, payload);
+        }
+    }
+
+    /// Build the slot map for this layer's attention call.
+    pub fn slot_map(&self, seq: &SeqState, layer: usize, selection: &[u32]) -> SlotMap {
+        let st = &seq.layers[layer];
+        let rb_len = if self.cfg.expose_rolling {
+            st.rolling.visible_len()
+        } else {
+            0
+        };
+        let rb_start = st.rolling.unflushed_pos() + st.rolling.pending() - rb_len;
+        SlotMap::build(
+            selection,
+            self.cfg.group,
+            self.cfg.sel_region,
+            self.cfg.p,
+            rb_start,
+            rb_len,
+        )
+    }
+
+    /// Fill one batch row of the attention inputs ([Hkv, P, d] slices +
+    /// mask [P]) from the slot map. `staging` holds payloads when the
+    /// reuse buffer is disabled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble(
+        &self,
+        seq: &mut SeqState,
+        layer: usize,
+        slot_map: &SlotMap,
+        hkv: usize,
+        d: usize,
+        staging: &HashMap<u32, Vec<f32>>,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let p = self.cfg.p;
+        let g = self.cfg.group;
+        let hd = self.layout.hd;
+        debug_assert_eq!(hd, hkv * d);
+        debug_assert_eq!(k_out.len(), hkv * p * d);
+        debug_assert_eq!(mask_out.len(), p);
+        slot_map.fill_mask(mask_out);
+
+        // collect rolling rows up-front (borrow split)
+        let st = &mut seq.layers[layer];
+        let rb_rows: HashMap<u32, (Vec<f32>, Vec<f32>)> = st
+            .rolling
+            .visible_entries()
+            .map(|(pos, k, v)| (pos as u32, (k.to_vec(), v.to_vec())))
+            .collect();
+
+        for (slot, src) in slot_map.slots.iter().enumerate() {
+            match src {
+                SlotSource::Invalid => {}
+                SlotSource::Rolling { pos } => {
+                    let (k, v) = rb_rows
+                        .get(pos)
+                        .unwrap_or_else(|| panic!("rolling pos {pos} not visible"));
+                    for gh in 0..hkv {
+                        let dst = gh * p * d + slot * d;
+                        k_out[dst..dst + d].copy_from_slice(&k[gh * d..(gh + 1) * d]);
+                        v_out[dst..dst + d].copy_from_slice(&v[gh * d..(gh + 1) * d]);
+                    }
+                }
+                SlotSource::Group { gid, member } => {
+                    // payload layout: [k rows: G*hd][v rows: G*hd]
+                    let payload: &[f32] = st
+                        .reuse
+                        .get(*gid)
+                        .or_else(|| staging.get(gid).map(|v| v.as_slice()))
+                        .unwrap_or_else(|| panic!("group {gid} in neither reuse nor staging"));
+                    let m = *member as usize;
+                    let krow = &payload[m * hd..(m + 1) * hd];
+                    let vrow = &payload[g * hd + m * hd..g * hd + (m + 1) * hd];
+                    for gh in 0..hkv {
+                        let dst = gh * p * d + slot * d;
+                        k_out[dst..dst + d].copy_from_slice(&krow[gh * d..(gh + 1) * d]);
+                        v_out[dst..dst + d].copy_from_slice(&vrow[gh * d..(gh + 1) * d]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of complete (selectable) groups for a layer.
+    pub fn n_groups(&self, seq: &SeqState, layer: usize) -> usize {
+        seq.layers[layer].klr.len() / self.cfg.group
+    }
+
+    /// In-memory management bytes for one sequence (the paper's
+    /// "KV cache management memory", Fig. 3a / Tab. 1).
+    pub fn management_bytes(&self, seq: &SeqState) -> u64 {
+        let hd = self.layout.hd as u64;
+        seq.layers
+            .iter()
+            .map(|st| {
+                st.klr.bytes()
+                    + st.reuse.bytes()
+                    + (st.rolling.visible_len() as u64 + st.rolling.pending() as u64)
+                        * 2 * hd * 4
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disk::{DiskProfile, SimDisk};
+    use crate::util::rng::Rng;
+
+    fn setup(g: usize, reuse_slots: usize) -> (KvManager, SeqState, Tensor) {
+        let hd = 8;
+        let layout = DiskLayout::new(hd, g, 256, 2, 0);
+        let disk = Arc::new(SimDisk::in_memory(DiskProfile::nvme()));
+        let cfg = ManagerConfig {
+            group: g,
+            rank: 4,
+            reuse_slots,
+            rb_visible: 4,
+            sel_region: 4 * g,
+            p: 4 * g + 6,
+            cache_flushed: false,
+            expose_rolling: true,
+        };
+        let m = KvManager::new(layout, disk, cfg);
+        let seq = m.new_seq(0);
+        // adapter: first 4 dims selector
+        let mut a = Tensor::zeros(&[hd, 4]);
+        for i in 0..4 {
+            *a.at_mut(&[i, i]) = 1.0;
+        }
+        (m, seq, a)
+    }
+
+    fn rows(n: usize, hd: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let k: Vec<f32> = (0..n * hd).map(|_| rng.normal_f32(1.0)).collect();
+        let v: Vec<f32> = (0..n * hd).map(|_| rng.normal_f32(1.0)).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn prefill_roundtrips_through_disk() {
+        let (m, mut seq, a) = setup(4, 8);
+        let (k, v) = rows(10, 8, 1);
+        m.ingest_prefill(&mut seq, 0, &k, &v, &a).unwrap();
+        // 2 full groups on disk, 2 tail entries in RB, klr has 8 rows
+        assert_eq!(seq.layers[0].klr.len(), 8);
+        assert_eq!(seq.layers[0].rolling.pending(), 2);
+        // read back group 1 from disk
+        let mut buf = vec![0u8; m.layout.group_payload_bytes() as usize];
+        m.disk.read(m.layout.offset(0, 0, 1), &mut buf).unwrap();
+        let (k2, _v2) = m.layout.decode_group(&buf);
+        assert_eq!(&k2[..], &k[4 * 8..8 * 8]);
+    }
+
+    #[test]
+    fn append_token_flush_writes_disk_and_klr() {
+        let (m, mut seq, a) = setup(2, 8);
+        let (k, v) = rows(2, 8, 2);
+        assert!(m
+            .append_token(&mut seq, 0, k[..8].to_vec(), v[..8].to_vec(), &a)
+            .unwrap()
+            .is_none());
+        let gid = m
+            .append_token(&mut seq, 0, k[8..].to_vec(), v[8..].to_vec(), &a)
+            .unwrap();
+        assert_eq!(gid, Some(0));
+        assert_eq!(seq.layers[0].klr.len(), 2);
+        // klr row 0 = first 4 dims of k row 0 (selector adapter)
+        assert_eq!(seq.layers[0].klr.row(0), &k[..4]);
+    }
+
+    #[test]
+    fn plan_loads_respects_reuse_buffer() {
+        let (m, mut seq, a) = setup(2, 8);
+        let (k, v) = rows(8, 8, 3);
+        m.ingest_prefill(&mut seq, 0, &k, &v, &a).unwrap();
+        let loads = m.plan_loads(&mut seq, 0, &[0, 2]);
+        assert_eq!(loads.len(), 2);
+        // simulate loading both
+        let mut staging = HashMap::new();
+        for l in &loads {
+            let mut buf = vec![0u8; l.len];
+            m.disk.read(l.offset, &mut buf).unwrap();
+            m.commit_load(&mut seq, 0, l.gid, &buf, &mut staging);
+        }
+        // now both are reuse hits
+        let loads2 = m.plan_loads(&mut seq, 0, &[0, 2]);
+        assert!(loads2.is_empty());
+        let (hits, misses) = seq.layers[0].reuse.counters();
+        assert_eq!((hits, misses), (2, 2));
+    }
+
+    #[test]
+    fn assemble_produces_exact_rows() {
+        let (m, mut seq, a) = setup(2, 8);
+        let hd = 8;
+        let (k, v) = rows(9, hd, 4); // 4 groups flushed + 1 tail
+        m.ingest_prefill(&mut seq, 0, &k, &v, &a).unwrap();
+        let selection = vec![1u32, 3u32];
+        let mut staging = HashMap::new();
+        for l in m.plan_loads(&mut seq, 0, &selection) {
+            let mut buf = vec![0u8; l.len];
+            m.disk.read(l.offset, &mut buf).unwrap();
+            m.commit_load(&mut seq, 0, l.gid, &buf, &mut staging);
+        }
+        let sm = m.slot_map(&seq, 0, &selection);
+        let (hkv, d) = (2, 4);
+        let p = m.cfg.p;
+        let mut k_out = vec![0.0; hkv * p * d];
+        let mut v_out = vec![0.0; hkv * p * d];
+        let mut mask = vec![0.0; p];
+        m.assemble(&mut seq, 0, &sm, hkv, d, &staging, &mut k_out, &mut v_out, &mut mask);
+        // slot 0 = group 1 member 0 = token 2
+        let tok = 2;
+        for gh in 0..hkv {
+            assert_eq!(
+                &k_out[gh * p * d..gh * p * d + d],
+                &k[tok * hd + gh * d..tok * hd + gh * d + d]
+            );
+        }
+        // rolling slot: sel_region=4 -> covers visible entries; the last
+        // visible entry is token 8 (the tail)
+        let rb_len = seq.layers[0].rolling.visible_len();
+        let last_rb_slot = m.cfg.sel_region + rb_len - 1;
+        for gh in 0..hkv {
+            let dst = gh * p * d + last_rb_slot * d;
+            assert_eq!(
+                &k_out[dst..dst + d],
+                &k[8 * hd + gh * d..8 * hd + gh * d + d]
+            );
+        }
+        assert_eq!(mask[0], 0.0);
+        assert_eq!(mask[p - 1], -1e9);
+    }
+
+    #[test]
+    fn management_memory_grows_with_context() {
+        let (m, mut seq, a) = setup(4, 8);
+        let (k, v) = rows(64, 8, 5);
+        m.ingest_prefill(&mut seq, 0, &k, &v, &a).unwrap();
+        m.ingest_prefill(&mut seq, 1, &k, &v, &a).unwrap();
+        let b1 = m.management_bytes(&seq);
+        let (k2, v2) = rows(64, 8, 6);
+        let mut seq2 = m.new_seq(1);
+        let kk = [k, k2].concat();
+        let vv = [v, v2].concat();
+        m.ingest_prefill(&mut seq2, 0, &kk, &vv, &a).unwrap();
+        m.ingest_prefill(&mut seq2, 1, &kk, &vv, &a).unwrap();
+        let b2 = m.management_bytes(&seq2);
+        assert!(b2 > b1);
+        // and both are far below the full cache
+        let full = 64u64 * 2 * 8 * 4 * 2; // tokens * K+V * hd * f32 * layers
+        assert!(b1 < full, "mgmt {b1} vs full {full}");
+    }
+}

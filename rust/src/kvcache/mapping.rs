@@ -1,0 +1,181 @@
+//! Mapping table (paper §3.4.4): gives the attention kernel a contiguous
+//! logical view over heterogeneous memory regions — reuse-buffer slots,
+//! freshly loaded groups, and rolling-buffer entries — "similar to OS
+//! virtual memory", and is what makes the layout PagedAttention-
+//! compatible. Rebuilt before every attention call as reuse patterns
+//! shift.
+
+/// Where one attention slot's KV entry comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotSource {
+    /// Token `member` of selected group `gid` (resident in reuse buffer
+    /// or fresh staging).
+    Group { gid: u32, member: u16 },
+    /// Rolling-buffer entry at absolute position `pos`.
+    Rolling { pos: u32 },
+    /// Padding — masked out of attention.
+    Invalid,
+}
+
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    pub slots: Vec<SlotSource>,
+    /// Number of valid (attendable) slots.
+    pub n_valid: usize,
+}
+
+impl SlotMap {
+    /// Build the logical view for one (sequence, layer) attention call.
+    ///
+    /// * `selection`  — selected group ids (≤ M), score-descending.
+    /// * `group`      — G.
+    /// * `sel_region` — attention slots reserved for selected groups (M*G).
+    /// * `p`          — total attention width P.
+    /// * `rb_start`   — absolute position of the first rolling-buffer-
+    ///                  visible token; group tokens at/after this position
+    ///                  are masked to avoid double counting.
+    /// * `rb_len`     — rolling-buffer visible entries.
+    pub fn build(
+        selection: &[u32],
+        group: usize,
+        sel_region: usize,
+        p: usize,
+        rb_start: usize,
+        rb_len: usize,
+    ) -> SlotMap {
+        assert!(sel_region + rb_len <= p, "P too small: {sel_region}+{rb_len} > {p}");
+        let mut slots = vec![SlotSource::Invalid; p];
+        let mut n_valid = 0;
+        for (si, &gid) in selection.iter().enumerate() {
+            if (si + 1) * group > sel_region {
+                break;
+            }
+            for m in 0..group {
+                let pos = gid as usize * group + m;
+                if pos < rb_start {
+                    slots[si * group + m] = SlotSource::Group {
+                        gid,
+                        member: m as u16,
+                    };
+                    n_valid += 1;
+                }
+            }
+        }
+        for j in 0..rb_len {
+            slots[sel_region + j] = SlotSource::Rolling {
+                pos: (rb_start + j) as u32,
+            };
+            n_valid += 1;
+        }
+        SlotMap { slots, n_valid }
+    }
+
+    /// Additive attention mask row (0 valid / NEG_INF invalid).
+    pub fn fill_mask(&self, mask_row: &mut [f32]) {
+        assert_eq!(mask_row.len(), self.slots.len());
+        for (m, s) in mask_row.iter_mut().zip(&self.slots) {
+            *m = if *s == SlotSource::Invalid { -1e9 } else { 0.0 };
+        }
+    }
+
+    /// Absolute token positions covered (for tests / recall metrics).
+    pub fn covered_positions(&self, group: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .slots
+            .iter()
+            .filter_map(|s| match s {
+                SlotSource::Group { gid, member } => {
+                    Some(*gid as usize * group + *member as usize)
+                }
+                SlotSource::Rolling { pos } => Some(*pos as usize),
+                SlotSource::Invalid => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn basic_layout() {
+        // G=2, selection [3,0], sel_region 4, P 8, rb covers pos >= 10, 2 entries
+        let sm = SlotMap::build(&[3, 0], 2, 4, 8, 10, 2);
+        assert_eq!(
+            sm.slots[0],
+            SlotSource::Group { gid: 3, member: 0 }
+        );
+        assert_eq!(
+            sm.slots[3],
+            SlotSource::Group { gid: 0, member: 1 }
+        );
+        assert_eq!(sm.slots[4], SlotSource::Rolling { pos: 10 });
+        assert_eq!(sm.slots[5], SlotSource::Rolling { pos: 11 });
+        assert_eq!(sm.slots[6], SlotSource::Invalid);
+        assert_eq!(sm.n_valid, 6);
+    }
+
+    #[test]
+    fn group_tokens_overlapping_rb_window_are_masked() {
+        // G=4, group 2 covers tokens 8..12; rb_start=10 -> members 2,3 masked
+        let sm = SlotMap::build(&[2], 4, 4, 8, 10, 3);
+        assert_eq!(sm.slots[0], SlotSource::Group { gid: 2, member: 0 }); // pos 8
+        assert_eq!(sm.slots[1], SlotSource::Group { gid: 2, member: 1 }); // pos 9
+        assert_eq!(sm.slots[2], SlotSource::Invalid); // pos 10 via RB
+        assert_eq!(sm.slots[3], SlotSource::Invalid);
+        // no double coverage
+        let cov = sm.covered_positions(4);
+        assert_eq!(cov, vec![8, 9, 10, 11, 12]);
+    }
+
+    #[test]
+    fn mask_matches_slots() {
+        let sm = SlotMap::build(&[0], 2, 2, 5, 100, 1);
+        let mut mask = vec![0.0f32; 5];
+        sm.fill_mask(&mut mask);
+        assert_eq!(mask, vec![0.0, 0.0, 0.0, -1e9, -1e9]);
+    }
+
+    #[test]
+    fn prop_no_position_covered_twice_and_all_selected_covered() {
+        proptest::check("mapping-coverage", 200, |rng| {
+            let g = rng.range(1, 6);
+            let m_region = rng.range(1, 8) * g;
+            let rb_len = rng.range(0, 8);
+            let p = m_region + rb_len + rng.below(4);
+            let n_groups_flushed = rng.range(4, 40);
+            let rb_start = n_groups_flushed * g - rng.below((g * 2).min(n_groups_flushed * g));
+            // random distinct selection
+            let n_sel = rng.range(0, (m_region / g) + 1);
+            let sel: Vec<u32> = rng
+                .sample_indices(n_groups_flushed, n_sel.min(n_groups_flushed))
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            let sm = SlotMap::build(&sel, g, m_region, p, rb_start, rb_len);
+            let cov = sm.covered_positions(g);
+            let mut dedup = cov.clone();
+            dedup.dedup();
+            crate::prop_assert!(dedup.len() == cov.len(), "position covered twice: {cov:?}");
+            // every selected-group token below rb_start is covered
+            for &gid in &sel {
+                for mm in 0..g {
+                    let pos = gid as usize * g + mm;
+                    if pos < rb_start {
+                        crate::prop_assert!(
+                            cov.binary_search(&pos).is_ok(),
+                            "selected pos {pos} not covered"
+                        );
+                    }
+                }
+            }
+            // n_valid consistent
+            crate::prop_assert!(sm.n_valid == cov.len(), "n_valid mismatch");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! KV-cache subsystem — the paper's §3.4 runtime state:
+//! disk layout (grouped, page-aligned records), rolling buffer for fresh
+//! entries, FIFO reuse buffer with slot table, compressed K-cache store,
+//! mapping table, and the manager that orchestrates them.
+
+pub mod layout;
+pub mod lowrank;
+pub mod manager;
+pub mod mapping;
+pub mod reuse;
+pub mod rolling;
+
+pub use layout::DiskLayout;
+pub use lowrank::LowRankStore;
+pub use manager::{GroupLoad, KvManager, ManagerConfig, SeqState};
+pub use mapping::{SlotMap, SlotSource};
+pub use reuse::ReuseBuffer;
+pub use rolling::{FlushedGroup, RollingBuffer};

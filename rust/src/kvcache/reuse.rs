@@ -1,0 +1,259 @@
+//! Reuse buffer (paper §3.4.3): fixed memory slots caching recently
+//! loaded KV groups across decode steps, exploiting the temporal locality
+//! of predicted critical groups (§3.4.2, Fig. 8). FIFO replacement, slot
+//! table for O(1) lookup. Hit/miss counters feed Tab. 5.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+#[derive(Debug)]
+pub struct ReuseBuffer {
+    /// Capacity in slots (C in the paper), each holding one group.
+    capacity: usize,
+    /// group payload floats per slot (2 * G * Hkv*d).
+    slot_floats: usize,
+    /// Flat slot storage: slot s at [s*slot_floats, (s+1)*slot_floats).
+    data: Vec<f32>,
+    /// Slot table: group id -> slot index.
+    table: HashMap<u32, usize>,
+    /// FIFO order of resident group ids.
+    fifo: VecDeque<u32>,
+    free: Vec<usize>,
+    /// Groups pinned for the in-flight step (unevictable): the current
+    /// selection must survive inserts of its own misses.
+    pinned: HashSet<u32>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ReuseBuffer {
+    pub fn new(capacity: usize, slot_floats: usize) -> ReuseBuffer {
+        ReuseBuffer {
+            capacity,
+            slot_floats,
+            data: vec![0.0; capacity * slot_floats],
+            table: HashMap::with_capacity(capacity),
+            fifo: VecDeque::with_capacity(capacity),
+            free: (0..capacity).rev().collect(),
+            pinned: HashSet::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Pin groups for the in-flight step; pinned groups are never evicted.
+    pub fn pin_many(&mut self, gids: &[u32]) {
+        self.pinned.extend(gids.iter().cloned());
+    }
+
+    pub fn unpin_all(&mut self) {
+        self.pinned.clear();
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Look up a group; counts a hit or miss. Returns the slot payload
+    /// (k_rows ++ v_rows) if resident.
+    pub fn lookup(&mut self, gid: u32) -> Option<&[f32]> {
+        match self.table.get(&gid) {
+            Some(&slot) => {
+                self.hits += 1;
+                Some(&self.data[slot * self.slot_floats..(slot + 1) * self.slot_floats])
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without counting (used by planners to diff selections).
+    pub fn contains(&self, gid: u32) -> bool {
+        self.table.contains_key(&gid)
+    }
+
+    /// Fetch without touching hit/miss counters (assembly path — the
+    /// hit/miss decision was already counted at plan time).
+    pub fn get(&self, gid: u32) -> Option<&[f32]> {
+        self.table
+            .get(&gid)
+            .map(|&slot| &self.data[slot * self.slot_floats..(slot + 1) * self.slot_floats])
+    }
+
+    /// Insert a loaded group (k_rows ++ v_rows), evicting the FIFO-oldest
+    /// *unpinned* group if full. Returns the slot index, or None when no
+    /// slot can be claimed (capacity 0, or everything pinned) — the
+    /// caller then stages the payload for this step only.
+    pub fn insert(&mut self, gid: u32, payload: &[f32]) -> Option<usize> {
+        if self.capacity == 0 {
+            return None;
+        }
+        assert_eq!(payload.len(), self.slot_floats, "payload size");
+        if let Some(&slot) = self.table.get(&gid) {
+            // refresh contents (e.g. group rewritten after RB flush)
+            self.data[slot * self.slot_floats..(slot + 1) * self.slot_floats]
+                .copy_from_slice(payload);
+            return Some(slot);
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                // rotate past pinned entries (bounded by fifo length)
+                let mut victim = None;
+                for _ in 0..self.fifo.len() {
+                    let g = self.fifo.pop_front().expect("fifo empty but no free slot");
+                    if self.pinned.contains(&g) {
+                        self.fifo.push_back(g);
+                    } else {
+                        victim = Some(g);
+                        break;
+                    }
+                }
+                let victim = victim?;
+                self.table.remove(&victim).expect("victim not in table")
+            }
+        };
+        self.data[slot * self.slot_floats..(slot + 1) * self.slot_floats]
+            .copy_from_slice(payload);
+        self.table.insert(gid, slot);
+        self.fifo.push_back(gid);
+        Some(slot)
+    }
+
+    /// Invalidate a group (its disk contents changed and the caller does
+    /// not have the fresh payload at hand).
+    pub fn invalidate(&mut self, gid: u32) {
+        if let Some(slot) = self.table.remove(&gid) {
+            self.free.push(slot);
+            self.fifo.retain(|g| *g != gid);
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Bytes of slot storage (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn payload(n: usize, tag: f32) -> Vec<f32> {
+        vec![tag; n]
+    }
+
+    #[test]
+    fn hit_miss_and_contents() {
+        let mut rb = ReuseBuffer::new(2, 4);
+        assert!(rb.lookup(5).is_none());
+        rb.insert(5, &payload(4, 5.0));
+        assert_eq!(rb.lookup(5).unwrap(), payload(4, 5.0).as_slice());
+        assert_eq!(rb.counters(), (1, 1));
+        assert!((rb.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_eviction_order() {
+        let mut rb = ReuseBuffer::new(2, 1);
+        rb.insert(1, &[1.0]);
+        rb.insert(2, &[2.0]);
+        rb.insert(3, &[3.0]); // evicts 1 (FIFO, not LRU)
+        assert!(!rb.contains(1));
+        assert!(rb.contains(2) && rb.contains(3));
+        // touching 2 does NOT protect it (FIFO)
+        rb.lookup(2);
+        rb.insert(4, &[4.0]); // evicts 2
+        assert!(!rb.contains(2));
+        assert!(rb.contains(3) && rb.contains(4));
+    }
+
+    #[test]
+    fn reinsert_refreshes_payload() {
+        let mut rb = ReuseBuffer::new(2, 2);
+        rb.insert(7, &[1.0, 1.0]);
+        rb.insert(7, &[9.0, 9.0]);
+        assert_eq!(rb.lookup(7).unwrap(), &[9.0, 9.0]);
+        assert_eq!(rb.len(), 1);
+    }
+
+    #[test]
+    fn invalidate_frees_slot() {
+        let mut rb = ReuseBuffer::new(1, 1);
+        rb.insert(1, &[1.0]);
+        rb.invalidate(1);
+        assert!(rb.is_empty());
+        rb.insert(2, &[2.0]);
+        assert!(rb.contains(2));
+    }
+
+    #[test]
+    fn capacity_zero_disables_reuse() {
+        let mut rb = ReuseBuffer::new(0, 4);
+        assert!(rb.insert(1, &payload(4, 1.0)).is_none());
+        assert!(rb.lookup(1).is_none());
+    }
+
+    #[test]
+    fn prop_never_exceeds_capacity_and_table_consistent() {
+        proptest::check("reuse-capacity", 200, |rng| {
+            let cap = rng.range(1, 8);
+            let mut rb = ReuseBuffer::new(cap, 2);
+            for _ in 0..100 {
+                let gid = rng.below(20) as u32;
+                if rng.chance(0.7) {
+                    rb.insert(gid, &[gid as f32, 0.0]);
+                } else if rng.chance(0.5) {
+                    rb.lookup(gid);
+                } else {
+                    rb.invalidate(gid);
+                }
+                crate::prop_assert!(rb.len() <= cap, "len {} > cap {cap}", rb.len());
+                // every resident gid's payload is intact
+                let resident: Vec<u32> = rb.fifo.iter().cloned().collect();
+                crate::prop_assert!(
+                    resident.len() == rb.len(),
+                    "fifo/table desync: {} vs {}",
+                    resident.len(),
+                    rb.len()
+                );
+                for g in resident {
+                    let p = rb.table[&g];
+                    crate::prop_assert!(
+                        rb.data[p * 2] == g as f32,
+                        "slot payload corrupted for {g}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,245 @@
+//! Rolling buffer (paper §3.4.1).
+//!
+//! Newly generated KV entries cannot be judged by the grouped predictor
+//! until they complete a group of G, so they are held in memory and
+//! always exposed to attention. When a full group accumulates it is
+//! flushed (offloaded to disk + appended to the compressed K cache), but
+//! the most recent `visible` entries stay attendable regardless — the
+//! App. Tab. 3 ablation shows dropping them collapses accuracy.
+
+#[derive(Debug, Clone)]
+pub struct RollingBuffer {
+    hd: usize,
+    group: usize,
+    /// How many trailing entries attention may see.
+    visible: usize,
+    /// All entries since the last flush boundary PLUS the retained
+    /// visibility window; ring-compacted on flush.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Absolute token position of entry 0 in `k`/`v`.
+    base_pos: usize,
+    /// Number of entries already flushed to disk (prefix of `k`).
+    flushed: usize,
+}
+
+/// A completed group ready for offload.
+#[derive(Debug, Clone)]
+pub struct FlushedGroup {
+    pub group_idx: usize,
+    pub k_rows: Vec<f32>,
+    pub v_rows: Vec<f32>,
+}
+
+impl RollingBuffer {
+    pub fn new(hd: usize, group: usize, visible: usize) -> RollingBuffer {
+        assert!(group > 0);
+        RollingBuffer {
+            hd,
+            group,
+            visible: visible.max(group),
+            k: Vec::new(),
+            v: Vec::new(),
+            base_pos: 0,
+            flushed: 0,
+        }
+    }
+
+    /// Initialize after prefill: `tail_k/v` are the last `n % G` entries
+    /// that did not complete a group, starting at absolute pos `base_pos`.
+    pub fn init_tail(&mut self, base_pos: usize, tail_k: Vec<Vec<f32>>, tail_v: Vec<Vec<f32>>) {
+        assert_eq!(tail_k.len(), tail_v.len());
+        self.base_pos = base_pos;
+        self.k = tail_k;
+        self.v = tail_v;
+        self.flushed = 0;
+    }
+
+    /// Number of entries attention should see right now.
+    pub fn visible_len(&self) -> usize {
+        self.k.len().min(self.visible)
+    }
+
+    /// (absolute position, k row, v row) of each visible entry.
+    pub fn visible_entries(&self) -> impl Iterator<Item = (usize, &[f32], &[f32])> {
+        let n = self.k.len();
+        let start = n - self.visible_len();
+        (start..n).map(move |i| {
+            (
+                self.base_pos + i,
+                self.k[i].as_slice(),
+                self.v[i].as_slice(),
+            )
+        })
+    }
+
+    /// Absolute position of the first *unflushed* entry.
+    pub fn unflushed_pos(&self) -> usize {
+        self.base_pos + self.flushed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.k.len() - self.flushed
+    }
+
+    /// Append a freshly generated KV entry; returns a completed group if
+    /// the append filled one (caller offloads it and extends K_lr).
+    pub fn push(&mut self, k_row: Vec<f32>, v_row: Vec<f32>) -> Option<FlushedGroup> {
+        assert_eq!(k_row.len(), self.hd);
+        assert_eq!(v_row.len(), self.hd);
+        self.k.push(k_row);
+        self.v.push(v_row);
+        if self.pending() < self.group {
+            return None;
+        }
+        // flush the completed group
+        let start = self.flushed;
+        let gpos = self.base_pos + start;
+        debug_assert_eq!(gpos % self.group, 0, "group boundary misaligned");
+        let mut k_rows = Vec::with_capacity(self.group * self.hd);
+        let mut v_rows = Vec::with_capacity(self.group * self.hd);
+        for i in start..start + self.group {
+            k_rows.extend_from_slice(&self.k[i]);
+            v_rows.extend_from_slice(&self.v[i]);
+        }
+        self.flushed += self.group;
+        self.compact();
+        Some(FlushedGroup {
+            group_idx: gpos / self.group,
+            k_rows,
+            v_rows,
+        })
+    }
+
+    /// Drop flushed entries that are no longer in the visibility window.
+    fn compact(&mut self) {
+        let keep_from = self.k.len().saturating_sub(self.visible).min(self.flushed);
+        if keep_from == 0 {
+            return;
+        }
+        self.k.drain(..keep_from);
+        self.v.drain(..keep_from);
+        self.base_pos += keep_from;
+        self.flushed -= keep_from;
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn row(hd: usize, tag: f32) -> Vec<f32> {
+        (0..hd).map(|i| tag * 100.0 + i as f32).collect()
+    }
+
+    #[test]
+    fn flushes_exactly_at_group_boundaries() {
+        let mut rb = RollingBuffer::new(8, 4, 8);
+        for t in 0..3 {
+            assert!(rb.push(row(8, t as f32), row(8, -(t as f32))).is_none());
+        }
+        let g = rb.push(row(8, 3.0), row(8, -3.0)).unwrap();
+        assert_eq!(g.group_idx, 0);
+        assert_eq!(g.k_rows.len(), 4 * 8);
+        assert_eq!(&g.k_rows[..8], row(8, 0.0).as_slice());
+        assert_eq!(&g.k_rows[24..32], row(8, 3.0).as_slice());
+        // next flush is group 1 at tokens 4..8
+        for t in 4..7 {
+            assert!(rb.push(row(8, t as f32), row(8, 0.0)).is_none());
+        }
+        let g1 = rb.push(row(8, 7.0), row(8, 0.0)).unwrap();
+        assert_eq!(g1.group_idx, 1);
+    }
+
+    #[test]
+    fn visibility_window_spans_flush_boundary() {
+        let mut rb = RollingBuffer::new(4, 4, 6);
+        for t in 0..8 {
+            rb.push(row(4, t as f32), row(4, t as f32));
+        }
+        // all 8 flushed; window keeps last 6
+        let vis: Vec<usize> = rb.visible_entries().map(|(p, _, _)| p).collect();
+        assert_eq!(vis, vec![2, 3, 4, 5, 6, 7]);
+        rb.push(row(4, 8.0), row(4, 8.0));
+        let vis: Vec<usize> = rb.visible_entries().map(|(p, _, _)| p).collect();
+        assert_eq!(vis, vec![3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn init_tail_after_prefill() {
+        let mut rb = RollingBuffer::new(4, 4, 4);
+        // prefill length 10, G=4 -> groups 0,1 flushed; tail = tokens 8,9
+        rb.init_tail(8, vec![row(4, 8.0), row(4, 9.0)], vec![row(4, 8.0), row(4, 9.0)]);
+        assert_eq!(rb.unflushed_pos(), 8);
+        assert_eq!(rb.pending(), 2);
+        assert!(rb.push(row(4, 10.0), row(4, 10.0)).is_none());
+        let g = rb.push(row(4, 11.0), row(4, 11.0)).unwrap();
+        assert_eq!(g.group_idx, 2);
+        assert_eq!(&g.k_rows[..4], row(4, 8.0).as_slice());
+    }
+
+    #[test]
+    fn prop_rolling_buffer_invariants() {
+        proptest::check("rolling-invariants", 200, |rng| {
+            let hd = 4;
+            let g = rng.range(1, 6);
+            let vis = rng.range(1, 12);
+            let mut rb = RollingBuffer::new(hd, g, vis);
+            let mut flushed_tokens = Vec::new();
+            let total = rng.range(1, 64);
+            for t in 0..total {
+                if let Some(fg) = rb.push(row(hd, t as f32), row(hd, t as f32)) {
+                    // flushed groups are consecutive and aligned
+                    flushed_tokens.push(fg.group_idx);
+                    crate::prop_assert!(
+                        fg.k_rows.len() == g * hd,
+                        "bad flush size"
+                    );
+                }
+                // visibility window always covers the most recent entry
+                let vis_pos: Vec<usize> = rb.visible_entries().map(|(p, _, _)| p).collect();
+                crate::prop_assert!(
+                    vis_pos.last() == Some(&t),
+                    "latest token {t} not visible: {vis_pos:?}"
+                );
+                // visible entries are consecutive positions
+                for w in vis_pos.windows(2) {
+                    crate::prop_assert!(w[1] == w[0] + 1, "gap in window {vis_pos:?}");
+                }
+                // pending never reaches a full group after push handling
+                crate::prop_assert!(rb.pending() < g.max(1), "pending {} >= g {g}", rb.pending());
+            }
+            // flushed groups are 0,1,2,... in order
+            for (i, gi) in flushed_tokens.iter().enumerate() {
+                crate::prop_assert!(*gi == i, "flush order broken {flushed_tokens:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flushed_group_content_preserves_token_order() {
+        proptest::check("rolling-order", 50, |rng| {
+            let g = rng.range(1, 5);
+            let mut rb = RollingBuffer::new(2, g, 4);
+            for t in 0..(3 * g) {
+                if let Some(fg) = rb.push(vec![t as f32, 0.0], vec![0.0, t as f32]) {
+                    for m in 0..g {
+                        let tok = fg.group_idx * g + m;
+                        crate::prop_assert!(
+                            fg.k_rows[m * 2] == tok as f32,
+                            "k order broken in group {}",
+                            fg.group_idx
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

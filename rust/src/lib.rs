@@ -1,0 +1,28 @@
+//! # KVSwap — disk-aware KV-cache offloading for long-context on-device inference
+//!
+//! Rust + JAX + Pallas reproduction of the CS.DC 2025 paper. This crate is
+//! the **Layer-3 coordinator**: it owns the serving event loop, the
+//! disk-resident KV cache and its in-memory metadata, the grouped
+//! critical-KV predictor driver, the I/O/compute-overlapped decode
+//! pipeline, the offline parameter tuner, and the baseline offloading
+//! policies the paper compares against.
+//!
+//! Dense math executes through AOT-compiled HLO artifacts (Layer 2 JAX
+//! calling Layer 1 Pallas kernels) loaded via the PJRT C API — Python is
+//! never on the request path. See `DESIGN.md` for the full architecture
+//! and `EXPERIMENTS.md` for the paper-vs-measured results.
+
+pub mod util;
+pub mod config;
+pub mod disk;
+pub mod runtime;
+pub mod kvcache;
+pub mod predictor;
+pub mod coordinator;
+pub mod baselines;
+pub mod tuner;
+pub mod metrics;
+pub mod workload;
+pub mod quality;
+pub mod server;
+pub mod bench;

@@ -1,0 +1,270 @@
+//! KVSwap CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve   — TCP serving front (newline JSON; see server module)
+//!   run     — one-shot decode run with a chosen policy, prints stats
+//!   quality — fidelity/token-agreement of a policy vs the Full-KV oracle
+//!   tune    — offline parameter tuning (paper §3.5 / Appendix A)
+//!   inspect — artifact manifest + preset summary
+//!
+//! Examples:
+//!   kvswap run --policy kvswap --batch 4 --context 2048 --steps 64 --disk nvme
+//!   kvswap tune --budget-mib 2 --disk emmc --out kvswap_tuned.json
+//!   kvswap serve --addr 127.0.0.1:7777 --policy kvswap --disk nvme
+
+use kvswap::baselines::{configure, Budget};
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::batcher::BatcherConfig;
+use kvswap::coordinator::router::Router;
+use kvswap::coordinator::{Engine, EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::metrics::Table;
+use kvswap::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
+use kvswap::tuner;
+use kvswap::util::cli::Args;
+use kvswap::util::json::Json;
+use kvswap::{log_info, quality};
+
+fn main() {
+    let args = Args::parse_env();
+    if args.flag("verbose") {
+        kvswap::util::set_log_level(2);
+    }
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
+        "quality" => cmd_quality(&args),
+        "tune" => cmd_tune(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => {
+            eprintln!(
+                "usage: kvswap <serve|run|quality|tune|inspect> [--options]\n\
+                 see `rust/src/main.rs` header for examples"
+            );
+            Err(anyhow::anyhow!("unknown command {cmd:?}"))
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
+    let policy = Policy::by_name(&args.str_or("policy", "kvswap"))
+        .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+    let disk = DiskProfile::by_name(&args.str_or("disk", "nvme"))
+        .ok_or_else(|| anyhow::anyhow!("unknown disk"))?;
+    let budget = if args.flag("tight") {
+        Budget::Tight
+    } else {
+        Budget::Relaxed
+    };
+    let group = args.usize_or("group", if disk.name == "emmc" { 8 } else { 4 });
+    let (policy, mut kv) = configure(&policy, budget, group);
+    if let Some(r) = args.get("rank") {
+        kv.rank = r.parse().unwrap_or(kv.rank);
+    }
+    if args.flag("no-reuse") {
+        kv.use_reuse = false;
+    }
+    Ok(EngineConfig {
+        preset: args.str_or("preset", "nano"),
+        batch: args.usize_or("batch", 1),
+        policy,
+        kv,
+        disk,
+        real_time: args.flag("real-time"),
+        time_scale: args.f64_or("time-scale", 1.0),
+        max_context: args.usize_or("max-context", args.usize_or("context", 2048)),
+        seed: args.u64_or("seed", 0),
+    })
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_common(args)?;
+    let context = args.usize_or("context", 2048);
+    let steps = args.usize_or("steps", 32);
+    let rt = std::rc::Rc::new(PjrtRuntime::new(Manifest::load(default_artifacts_dir())?)?);
+    log_info!(
+        "run: policy={} preset={} b={} context={} disk={} steps={}",
+        cfg.policy.name(),
+        cfg.preset,
+        cfg.batch,
+        context,
+        cfg.disk.name,
+        steps
+    );
+    let mut engine = Engine::new(rt, cfg.clone())?;
+    engine.ingest_synthetic(&vec![context; cfg.batch])?;
+    let (stats, _, _) = engine.decode(steps, false, None)?;
+    println!(
+        "throughput: {:.2} tokens/s  ({} tokens in {:.2}s {})",
+        stats.tokens_per_sec(),
+        stats.tokens,
+        stats.seconds,
+        if cfg.real_time { "wall" } else { "virtual" }
+    );
+    println!("bytes loaded: {}", kvswap::util::fmt_bytes(stats.bytes_loaded));
+    println!("io utilization: {:.1}%", stats.io_utilization * 100.0);
+    if let Some(r) = stats.reuse_rate {
+        println!("reuse rate: {:.1}%", r * 100.0);
+    }
+    println!("selection overlap: {:.1}%", stats.mean_overlap * 100.0);
+    println!(
+        "management memory: {}",
+        kvswap::util::fmt_bytes(engine.management_bytes())
+    );
+    println!("latency breakdown:\n{}", stats.breakdown.report());
+    Ok(())
+}
+
+fn cmd_quality(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_common(args)?;
+    let context = args.usize_or("context", 1024);
+    let steps = args.usize_or("steps", 16);
+    let rt = std::rc::Rc::new(PjrtRuntime::new(Manifest::load(default_artifacts_dir())?)?);
+    let rep = quality::evaluate_policy(rt, cfg, context, steps, args.u64_or("seed", 0))?;
+    println!(
+        "{}: fidelity={:.4} token_agreement={:.3} (context {context}, {} steps)",
+        rep.policy, rep.fidelity, rep.token_agreement, rep.steps
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let rt = std::rc::Rc::new(PjrtRuntime::new(Manifest::load(default_artifacts_dir())?)?);
+    let preset = args.str_or("preset", "nano");
+    let spec = rt
+        .manifest
+        .presets
+        .get(&preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?
+        .spec
+        .clone();
+    let disk = DiskProfile::by_name(&args.str_or("disk", "nvme"))
+        .ok_or_else(|| anyhow::anyhow!("unknown disk"))?;
+    let cfg = tuner::SolverConfig {
+        budget_bytes: (args.f64_or("budget-mib", 2.0) * 1024.0 * 1024.0) as u64,
+        s_max: args.usize_or("s-max", 2048),
+        b_max: args.usize_or("b-max", 8),
+        mg_entries: args.usize_or("mg", 256),
+        alpha: args.f64_or("alpha", 0.15),
+        ..Default::default()
+    };
+    // lookup table from the locality model (or measured via `run`)
+    let table = tuner::tables::ReuseTable::from_locality_model(
+        cfg.mg_entries / 4,
+        0.77,
+        &[0, 16, 32, 64, 128, 256, 512],
+    );
+    // profile a few live points so T_model is measured, not guessed
+    let mut delays = tuner::DelayModel::default();
+    for &(b, s) in &[(1usize, 1024usize), (1, 2048), (4, 2048)] {
+        if b > cfg.b_max || s > cfg.s_max || !rt.manifest.has(&preset, b, "embed") {
+            continue;
+        }
+        let mut e = Engine::new(
+            rt.clone(),
+            EngineConfig {
+                preset: preset.clone(),
+                batch: b,
+                policy: Policy::KvSwap,
+                kv: KvSwapConfig::default(),
+                disk: disk.clone(),
+                real_time: false,
+                time_scale: 1.0,
+                max_context: s,
+                seed: 0,
+            },
+        )?;
+        e.ingest_synthetic(&vec![s - 64; b])?;
+        let (stats, _, _) = e.decode(6, false, None)?;
+        let layers = spec.n_layers as f64;
+        delays.add(tuner::ProfileSample {
+            batch: b,
+            context: s,
+            group: 4,
+            rank: 16,
+            reuse_slots: KvSwapConfig::default().reuse_slots,
+            t_io: stats.breakdown.get(kvswap::metrics::Phase::IoWait).as_secs_f64()
+                / (stats.steps as f64 * layers),
+            t_compute: (stats.breakdown.get(kvswap::metrics::Phase::Attention)
+                + stats.breakdown.get(kvswap::metrics::Phase::Predict))
+            .as_secs_f64()
+                / (stats.steps as f64 * layers),
+        });
+        log_info!("profiled (b={b}, S={s})");
+    }
+
+    let sols = tuner::solve(&spec, &disk, &table, &delays, &cfg);
+    let mut out = Json::obj();
+    out.set("preset", preset.as_str().into());
+    out.set("disk", disk.name.into());
+    out.set("budget_bytes", (cfg.budget_bytes as usize).into());
+    out.set("solutions", tuner::solver::solutions_to_json(&sols));
+    let path = args.str_or("out", "kvswap_tuned.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+
+    let mut t = Table::new(&["b", "S", "G", "rank", "C", "unhidden_io", "mgmt", "feasible"]);
+    for s in &sols {
+        t.row(vec![
+            s.batch.to_string(),
+            s.context.to_string(),
+            s.group.to_string(),
+            s.rank.to_string(),
+            s.reuse_slots.to_string(),
+            format!("{:.2}", s.unhidden_io),
+            kvswap::util::fmt_bytes(s.mgmt_bytes),
+            s.feasible.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_common(args)?;
+    let addr = args.str_or("addr", "127.0.0.1:7777");
+    let batcher = BatcherConfig {
+        supported: args.usize_list_or("batches", &[1, 2, 4, 8]),
+        linger_s: args.f64_or("linger", 0.05),
+        max_context: cfg.max_context,
+    };
+    let router = Router::spawn(default_artifacts_dir(), cfg, batcher);
+    let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
+    kvswap::server::serve(&addr, &router, max_conns)?;
+    router.stop()
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let mut t = Table::new(&["preset", "params", "layers", "kv/token", "batches", "ncaps", "ranks"]);
+    let mut names: Vec<&String> = manifest.presets.keys().collect();
+    names.sort();
+    for name in names {
+        let p = &manifest.presets[name];
+        t.row(vec![
+            name.clone(),
+            format!("{:.2}M", p.spec.n_params() as f64 / 1e6),
+            p.spec.n_layers.to_string(),
+            format!("{} B", p.spec.kv_bytes_per_token()),
+            format!("{:?}", p.batches),
+            format!("{:?}", p.ncaps),
+            format!("{:?}", p.ranks),
+        ]);
+    }
+    println!("{}", t.render());
+    if args.flag("artifacts") {
+        for name in manifest.presets.keys() {
+            for b in &manifest.presets[name].batches {
+                for a in manifest.artifact_names(name, *b) {
+                    println!("{name}/b{b}/{a}");
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,252 @@
+//! Serving metrics: per-phase latency breakdown (the paper's Fig. 13a),
+//! throughput accounting, and report tables.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::mathx;
+
+/// Decode phases instrumented by the engine (paper Fig. 13a breakdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Embed,
+    Predict,
+    Select,
+    IoWait,
+    Gather,
+    Attention,
+    ReuseMgmt,
+    KvAppend,
+    Logits,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Embed => "embed",
+            Phase::Predict => "predict",
+            Phase::Select => "select",
+            Phase::IoWait => "io_wait",
+            Phase::Gather => "gather",
+            Phase::Attention => "attention",
+            Phase::ReuseMgmt => "reuse_mgmt",
+            Phase::KvAppend => "kv_append",
+            Phase::Logits => "logits",
+        }
+    }
+
+    pub fn all() -> [Phase; 9] {
+        [
+            Phase::Embed,
+            Phase::Predict,
+            Phase::Select,
+            Phase::IoWait,
+            Phase::Gather,
+            Phase::Attention,
+            Phase::ReuseMgmt,
+            Phase::KvAppend,
+            Phase::Logits,
+        ]
+    }
+}
+
+/// Accumulates phase durations across decode steps.
+#[derive(Debug, Default, Clone)]
+pub struct Breakdown {
+    totals: BTreeMap<Phase, Duration>,
+    pub steps: u64,
+}
+
+impl Breakdown {
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        *self.totals.entry(phase).or_insert(Duration::ZERO) += d;
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.totals.get(&phase).cloned().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Per-step mean duration of a phase, in milliseconds.
+    pub fn per_step_ms(&self, phase: Phase) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.get(phase).as_secs_f64() * 1e3 / self.steps as f64
+    }
+
+    /// I/O : compute ratio — the paper's Fig. 3b statistic.
+    pub fn io_compute_ratio(&self) -> f64 {
+        let io = self.get(Phase::IoWait).as_secs_f64();
+        let compute = self.get(Phase::Attention).as_secs_f64()
+            + self.get(Phase::Predict).as_secs_f64()
+            + self.get(Phase::Embed).as_secs_f64()
+            + self.get(Phase::Logits).as_secs_f64();
+        if compute <= 0.0 {
+            return 0.0;
+        }
+        io / compute
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for p in Phase::all() {
+            let d = self.get(p);
+            if d > Duration::ZERO {
+                s.push_str(&format!("  {:<11} {:>9.3} ms/step\n", p.name(), self.per_step_ms(p)));
+            }
+        }
+        s
+    }
+}
+
+/// End-of-run decode statistics.
+#[derive(Debug, Clone)]
+pub struct DecodeStats {
+    /// Generated tokens (batch * steps).
+    pub tokens: u64,
+    pub steps: u64,
+    /// Wall (or virtual) seconds spent decoding.
+    pub seconds: f64,
+    pub breakdown: Breakdown,
+    /// Mean reuse-buffer hit rate across layers/seqs (None = reuse off).
+    pub reuse_rate: Option<f64>,
+    /// Disk I/O utilization vs peak bandwidth during decode.
+    pub io_utilization: f64,
+    pub bytes_loaded: u64,
+    pub mean_overlap: f64,
+}
+
+impl DecodeStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.seconds <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.seconds
+        }
+    }
+}
+
+/// Latency percentile summary for request-level metrics (server example).
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub n: usize,
+}
+
+pub fn latency_summary(samples_ms: &[f64]) -> LatencySummary {
+    LatencySummary {
+        p50_ms: mathx::percentile(samples_ms, 50.0),
+        p90_ms: mathx::percentile(samples_ms, 90.0),
+        p99_ms: mathx::percentile(samples_ms, 99.0),
+        mean_ms: mathx::summarize(samples_ms).mean,
+        n: samples_ms.len(),
+    }
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len() - 2)
+        ));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_and_reports() {
+        let mut b = Breakdown::default();
+        b.add(Phase::Attention, Duration::from_millis(10));
+        b.add(Phase::Attention, Duration::from_millis(20));
+        b.add(Phase::IoWait, Duration::from_millis(60));
+        b.steps = 3;
+        assert_eq!(b.get(Phase::Attention), Duration::from_millis(30));
+        assert!((b.per_step_ms(Phase::IoWait) - 20.0).abs() < 1e-9);
+        assert!((b.io_compute_ratio() - 2.0).abs() < 1e-9);
+        assert!(b.report().contains("attention"));
+        assert!(!b.report().contains("gather")); // zero phases omitted
+    }
+
+    #[test]
+    fn decode_stats_throughput() {
+        let s = DecodeStats {
+            tokens: 100,
+            steps: 50,
+            seconds: 4.0,
+            breakdown: Breakdown::default(),
+            reuse_rate: Some(0.8),
+            io_utilization: 0.5,
+            bytes_loaded: 1 << 20,
+            mean_overlap: 0.7,
+        };
+        assert!((s.tokens_per_sec() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "tok/s"]);
+        t.row(vec!["kvswap".into(), "46.8".into()]);
+        t.row(vec!["flexgen".into(), "0.4".into()]);
+        let r = t.render();
+        assert!(r.contains("method"));
+        assert!(r.contains("kvswap"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = latency_summary(&samples);
+        assert!((s.p50_ms - 50.5).abs() < 1.0);
+        assert!(s.p99_ms > 98.0);
+        assert_eq!(s.n, 100);
+    }
+}

@@ -1,0 +1,209 @@
+//! Grouped critical-KV predictor (paper §3.3) — the Rust half.
+//!
+//! The dense math (approximate low-rank scores, Eq. 1) runs in the HLO
+//! `predict` artifact; this module owns the control flow: per-group
+//! ReduceMax, Top-M selection, cross-step overlap statistics (Fig. 8),
+//! and the per-head variant used by the InfiniGen baseline.
+
+use crate::util::mathx;
+
+/// Select the top-M groups from head-summed token scores.
+///
+/// * `scores`    — [ncap] token scores (NEG_INF beyond `n_flushed`).
+/// * `n_flushed` — tokens present in the compressed cache (on disk).
+/// * `group`     — G.
+/// * `m`         — number of groups to select.
+///
+/// Returns group ids, score-descending (paper: ReduceMax + TopK).
+pub fn select_groups(scores: &[f32], n_flushed: usize, group: usize, m: usize) -> Vec<u32> {
+    let n = n_flushed.min(scores.len());
+    if n == 0 || m == 0 {
+        return Vec::new();
+    }
+    let gmax = mathx::group_max(&scores[..n], group);
+    // only complete groups are on disk
+    let n_complete = n / group;
+    let gmax = &gmax[..n_complete];
+    mathx::top_k_indices(gmax, m)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect()
+}
+
+/// Per-head token selection (InfiniGen-style, no head aggregation):
+/// each head picks its own top tokens; the union is loaded. Produces the
+/// fragmented access pattern the paper criticizes (§3.3 "prior work
+/// predicts on individual heads or tokens").
+pub fn select_tokens_per_head(
+    head_scores: &[Vec<f32>],
+    n_flushed: usize,
+    per_head: usize,
+) -> Vec<u32> {
+    let mut sel: Vec<u32> = Vec::new();
+    for hs in head_scores {
+        let n = n_flushed.min(hs.len());
+        for idx in mathx::top_k_indices(&hs[..n], per_head) {
+            sel.push(idx as u32);
+        }
+    }
+    sel.sort_unstable();
+    sel.dedup();
+    sel
+}
+
+/// Head-aggregated token selection (InfiniGen* / Loki baselines: token
+/// granularity, G=1 equivalent).
+pub fn select_tokens(scores: &[f32], n_flushed: usize, k: usize) -> Vec<u32> {
+    select_groups(scores, n_flushed, 1, k)
+}
+
+/// Cross-step overlap tracking (paper §3.4.2, Fig. 8): the fraction of
+/// step-j critical groups that were also critical at step j-1 — the
+/// statistic that justifies the reuse buffer.
+#[derive(Debug, Default, Clone)]
+pub struct OverlapTracker {
+    prev: Vec<u32>,
+    pub ratios: Vec<f64>,
+    /// Selection frequency per group id (Fig. 8 histogram).
+    pub freq: std::collections::HashMap<u32, u64>,
+}
+
+impl OverlapTracker {
+    pub fn record(&mut self, selection: &[u32]) {
+        for &g in selection {
+            *self.freq.entry(g).or_insert(0) += 1;
+        }
+        if !self.prev.is_empty() && !selection.is_empty() {
+            let prev: std::collections::HashSet<u32> = self.prev.iter().cloned().collect();
+            let overlap = selection.iter().filter(|g| prev.contains(g)).count();
+            self.ratios.push(overlap as f64 / selection.len() as f64);
+        }
+        self.prev = selection.to_vec();
+    }
+
+    pub fn mean_overlap(&self) -> f64 {
+        if self.ratios.is_empty() {
+            0.0
+        } else {
+            self.ratios.iter().sum::<f64>() / self.ratios.len() as f64
+        }
+    }
+
+    /// Fraction of distinct groups accounting for `mass` of all
+    /// selections (Fig. 8: "fewer than 22% of groups account for 80%").
+    pub fn head_mass_fraction(&self, mass: f64) -> f64 {
+        if self.freq.is_empty() {
+            return 0.0;
+        }
+        let mut counts: Vec<u64> = self.freq.values().cloned().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = counts.iter().sum();
+        let target = (total as f64 * mass) as u64;
+        let mut acc = 0;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (i + 1) as f64 / counts.len() as f64;
+            }
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn select_groups_picks_peak_groups() {
+        // 8 tokens, G=2: scores peak in groups 1 and 3
+        let scores = vec![0.0, 0.1, 5.0, 0.0, 0.2, 0.1, 0.0, 9.0];
+        assert_eq!(select_groups(&scores, 8, 2, 2), vec![3, 1]);
+        assert_eq!(select_groups(&scores, 8, 2, 1), vec![3]);
+    }
+
+    #[test]
+    fn select_groups_ignores_unflushed_and_partial_tail() {
+        let scores = vec![0.0, 0.1, 5.0, 0.0, 9.0, 9.0, 9.0];
+        // only 4 flushed tokens -> 2 complete groups; the 9.0s invisible
+        let sel = select_groups(&scores, 4, 2, 2);
+        assert_eq!(sel, vec![1, 0]);
+        // n_flushed=5 with G=2 -> still only 2 complete groups
+        let sel2 = select_groups(&scores, 5, 2, 4);
+        assert_eq!(sel2.len(), 2);
+    }
+
+    #[test]
+    fn select_groups_empty_cases() {
+        assert!(select_groups(&[], 0, 4, 8).is_empty());
+        assert!(select_groups(&[1.0, 2.0], 2, 4, 8).is_empty()); // no complete group
+        assert!(select_groups(&[1.0, 2.0], 2, 1, 0).is_empty());
+    }
+
+    #[test]
+    fn per_head_union_is_fragmented() {
+        let h0 = vec![9.0, 0.0, 0.0, 8.0];
+        let h1 = vec![0.0, 9.0, 0.0, 8.0];
+        let sel = select_tokens_per_head(&[h0, h1], 4, 2);
+        assert_eq!(sel, vec![0, 1, 3]); // union, deduped, sorted
+    }
+
+    #[test]
+    fn overlap_tracker_ratio() {
+        let mut t = OverlapTracker::default();
+        t.record(&[1, 2, 3, 4]);
+        t.record(&[3, 4, 5, 6]); // overlap 2/4
+        t.record(&[3, 4, 5, 6]); // overlap 4/4
+        assert_eq!(t.ratios, vec![0.5, 1.0]);
+        assert!((t.mean_overlap() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn head_mass_fraction_skewed() {
+        let mut t = OverlapTracker::default();
+        // group 0 selected 80 times, groups 1..=19 once each
+        for _ in 0..80 {
+            t.record(&[0]);
+        }
+        for g in 1..20 {
+            t.record(&[g]);
+        }
+        // one group (5% of 20) carries 80% of mass
+        assert!(t.head_mass_fraction(0.8) <= 0.05 + 1e-9);
+    }
+
+    #[test]
+    fn prop_selection_valid_and_sorted_by_score() {
+        proptest::check("select-groups", 200, |rng: &mut Rng| {
+            let g = rng.range(1, 8);
+            let n = rng.range(0, 128);
+            let m = rng.range(0, 16);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            let sel = select_groups(&scores, n, g, m);
+            let n_complete = n / g;
+            crate::prop_assert!(sel.len() == m.min(n_complete), "len");
+            let gmax = mathx::group_max(&scores[..n.min(scores.len())], g);
+            for w in sel.windows(2) {
+                crate::prop_assert!(
+                    gmax[w[0] as usize] >= gmax[w[1] as usize],
+                    "not score-descending"
+                );
+            }
+            for &gid in &sel {
+                crate::prop_assert!((gid as usize) < n_complete, "gid out of range");
+            }
+            // no group outside the selection beats the worst selected
+            if let Some(&last) = sel.last() {
+                let worst = gmax[last as usize];
+                for (i, &v) in gmax[..n_complete].iter().enumerate() {
+                    if !sel.contains(&(i as u32)) {
+                        crate::prop_assert!(v <= worst + 1e-6, "missed a better group");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Quality harness: the paper's generation-quality metrics re-expressed
+//! for random-weight models (DESIGN.md §2 substitution):
+//!
+//! * **fidelity** — teacher-forced cosine between a method's final
+//!   activations and the Full-KV oracle's, per decode step (the analogue
+//!   of the paper's "relative accuracy loss" in Tab. 2/3);
+//! * **token agreement** — fraction of free-running decode steps where
+//!   the method samples the oracle's token;
+//! * **NIAH retrieval** — needle planted in KV space at a (context,
+//!   depth) cell (Fig. 9): retrieval score = cosine between method and
+//!   oracle outputs, which the planted marker dominates.
+
+use std::rc::Rc;
+
+use crate::coordinator::{Engine, EngineConfig, Policy};
+use crate::runtime::host_ref::{HostModel, KvLayer};
+use crate::runtime::PjrtRuntime;
+use crate::util::mathx;
+use crate::util::rng::Rng;
+use crate::workload::needle;
+
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub policy: String,
+    /// Mean per-step activation cosine vs the oracle (teacher-forced).
+    pub fidelity: f64,
+    /// Token agreement rate over a free-running decode.
+    pub token_agreement: f64,
+    pub steps: usize,
+}
+
+fn prompts_for(batch: usize, context: usize, vocab: usize, seed: u64) -> Vec<Vec<i32>> {
+    (0..batch)
+        .map(|i| {
+            let mut rng = Rng::new(seed ^ (0xA11CE + i as u64));
+            (0..context).map(|_| rng.below(vocab) as i32).collect()
+        })
+        .collect()
+}
+
+/// Teacher-forced fidelity + free-running token agreement of one policy
+/// against the Full-KV oracle under the same engine config.
+pub fn evaluate_policy(
+    rt: Rc<PjrtRuntime>,
+    mut cfg: EngineConfig,
+    context: usize,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<QualityReport> {
+    let policy = cfg.policy.clone();
+    cfg.real_time = false;
+    let vocab = rt.manifest.presets[&cfg.preset].spec.vocab;
+    let prompts = prompts_for(cfg.batch, context, vocab, seed);
+
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.policy = Policy::FullMemory;
+    let mut oracle = Engine::new(rt.clone(), oracle_cfg)?;
+    oracle.prefill(&prompts)?;
+    let (_, oxs, otoks) = oracle.decode(steps, true, None)?;
+
+    // teacher-forced pass: per-step fidelity
+    let mut m1 = Engine::new(rt.clone(), cfg.clone())?;
+    m1.prefill(&prompts)?;
+    let (_, mxs, _) = m1.decode(steps, true, Some(&otoks))?;
+    let mut cos = 0.0;
+    let mut n = 0;
+    for (ox, mx) in oxs.iter().zip(&mxs) {
+        for b in 0..cfg.batch {
+            cos += mathx::cosine(ox.row(&[b]), mx.row(&[b])).max(0.0) as f64;
+            n += 1;
+        }
+    }
+
+    // free-running pass: token agreement
+    let mut m2 = Engine::new(rt.clone(), cfg.clone())?;
+    m2.prefill(&prompts)?;
+    let (_, _, mtoks) = m2.decode(steps, false, None)?;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (o, m) in otoks.iter().zip(&mtoks) {
+        for (a, b) in o.iter().zip(m) {
+            agree += (a == b) as usize;
+            total += 1;
+        }
+    }
+
+    Ok(QualityReport {
+        policy: policy.name(),
+        fidelity: cos / n.max(1) as f64,
+        token_agreement: agree as f64 / total.max(1) as f64,
+        steps,
+    })
+}
+
+/// Per-layer query vectors the model will issue at the next decode step
+/// (needed to construct a query-aligned needle).
+pub fn collect_layer_queries(
+    host: &HostModel,
+    x0: &[f32],
+    caches: &[KvLayer],
+    pos: i32,
+) -> Vec<Vec<f32>> {
+    let mut x = x0.to_vec();
+    let mut qs = Vec::with_capacity(host.spec.n_layers);
+    for layer in 0..host.spec.n_layers {
+        let (q, _, _) = host.qkv(layer, &x, pos);
+        qs.push(q);
+        let n = caches[layer].len();
+        let krows: Vec<&[f32]> = (0..n).map(|i| caches[layer].k_row(i)).collect();
+        let vrows: Vec<&[f32]> = (0..n).map(|i| caches[layer].v_row(i)).collect();
+        let (x1, _, _) = host.block(layer, &x, &krows, &vrows, None, pos);
+        x = x1;
+    }
+    qs
+}
+
+/// One NIAH heat-map cell (Fig. 9): plant a needle at `depth_frac` of a
+/// `context`-token prompt and measure the method's retrieval score.
+pub fn niah_cell(
+    rt: Rc<PjrtRuntime>,
+    mut cfg: EngineConfig,
+    context: usize,
+    depth_frac: f64,
+    seed: u64,
+    strength: f32,
+) -> anyhow::Result<f64> {
+    cfg.real_time = false;
+    let spec = rt.manifest.presets[&cfg.preset].spec.clone();
+    let vocab = spec.vocab;
+    anyhow::ensure!(cfg.batch == 1, "niah_cell uses batch 1");
+    let prompts = prompts_for(1, context, vocab, seed);
+
+    // host-side mirror: prefill + the queries of the evaluation step
+    let host = HostModel::new(spec.clone(), rt.host_weights(&cfg.preset)?);
+    let (xs_last, caches) = host.prefill(&prompts[0]);
+    let (tok0, _) = host.logits_argmax(xs_last.last().unwrap());
+    let x0 = host.embed(tok0);
+    let queries = collect_layer_queries(&host, &x0, &caches, context as i32);
+
+    // needle position: inside the flushed region, away from the rolling
+    // window
+    let g = cfg.kv.group_size;
+    let flushed = (context / g) * g;
+    let max_pos = flushed.saturating_sub(cfg.kv.rb_slots + g).max(1);
+    let pos = ((max_pos - 1) as f64 * depth_frac) as usize;
+
+    let hd = spec.kv_flat_dim();
+    let keys: Vec<Vec<f32>> = queries
+        .iter()
+        .map(|q| needle::needle_key(q, spec.n_kv_heads, spec.head_dim, spec.n_rep(), strength))
+        .collect();
+    let values: Vec<Vec<f32>> = (0..spec.n_layers)
+        .map(|l| needle::marker_value(hd, seed ^ l as u64, 3.0))
+        .collect();
+
+    // oracle with needle
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.policy = Policy::FullMemory;
+    let mut oracle = Engine::new(rt.clone(), oracle_cfg)?;
+    oracle.prefill(&prompts)?;
+    oracle.plant_needle(0, pos, &keys, &values)?;
+    let (_, oxs, _) = oracle.decode(1, true, None)?;
+
+    // method with needle
+    let mut m = Engine::new(rt.clone(), cfg)?;
+    m.prefill(&prompts)?;
+    m.plant_needle(0, pos, &keys, &values)?;
+    let (_, mxs, _) = m.decode(1, true, None)?;
+
+    Ok(needle::retrieval_score(
+        mxs[0].row(&[0]),
+        oxs[0].row(&[0]),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::runtime::tensor::Tensor;
+    use std::collections::HashMap;
+
+    fn tiny_host() -> HostModel {
+        let spec = ModelSpec {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 4,
+            d_ff: 32,
+            vocab: 32,
+            rope_base: 10000.0,
+            rms_eps: 1e-5,
+        };
+        let mut rng = Rng::new(3);
+        let mut w = HashMap::new();
+        w.insert("emb".into(), Tensor::from_vec(&[32, 16], (0..512).map(|_| rng.normal_f32(0.1)).collect()));
+        w.insert("fln".into(), Tensor::full(&[16], 1.0));
+        for i in 0..2 {
+            for (t, shape) in [
+                ("ln1", vec![16]),
+                ("wq", vec![16, 16]),
+                ("wk", vec![16, 8]),
+                ("wv", vec![16, 8]),
+                ("wo", vec![16, 16]),
+                ("ln2", vec![16]),
+                ("wg", vec![16, 32]),
+                ("wu", vec![16, 32]),
+                ("wd", vec![32, 16]),
+            ] {
+                let n: usize = shape.iter().product();
+                let data = if t.starts_with("ln") {
+                    vec![1.0; n]
+                } else {
+                    (0..n).map(|_| rng.normal_f32(0.15)).collect()
+                };
+                w.insert(format!("layer{i}.{t}"), Tensor::from_vec(&shape, data));
+            }
+        }
+        HostModel::new(spec, Rc::new(w))
+    }
+
+    #[test]
+    fn collect_layer_queries_matches_qkv_of_decode_path() {
+        let host = tiny_host();
+        let (_, caches) = host.prefill(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let x0 = host.embed(3);
+        let qs = collect_layer_queries(&host, &x0, &caches, 8);
+        assert_eq!(qs.len(), 2);
+        // layer-0 query comes straight from x0
+        let (q0, _, _) = host.qkv(0, &x0, 8);
+        assert_eq!(qs[0], q0);
+        // layer-1 query differs (x evolved through layer 0)
+        let (q1_wrong, _, _) = host.qkv(1, &x0, 8);
+        assert_ne!(qs[1], q1_wrong);
+    }
+
+    #[test]
+    fn planted_needle_dominates_host_attention() {
+        let host = tiny_host();
+        let (_, mut caches) = host.prefill(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let x0 = host.embed(3);
+        let qs = collect_layer_queries(&host, &x0, &caches, 8);
+        let hd = host.spec.kv_flat_dim();
+        let key = needle::needle_key(&qs[0], 2, 4, 2, 12.0);
+        let marker = needle::marker_value(hd, 9, 3.0);
+        caches[0].k[2 * hd..3 * hd].copy_from_slice(&key);
+        caches[0].v[2 * hd..3 * hd].copy_from_slice(&marker);
+        // attention at layer 0 should now return ~the marker
+        let n = caches[0].len();
+        let krows: Vec<&[f32]> = (0..n).map(|i| caches[0].k_row(i)).collect();
+        let vrows: Vec<&[f32]> = (0..n).map(|i| caches[0].v_row(i)).collect();
+        let out = host.attention(&qs[0], &krows, &vrows, None);
+        let d = host.spec.head_dim;
+        for hq in 0..host.spec.n_q_heads {
+            let g = hq / host.spec.n_rep();
+            let cos = mathx::cosine(&out[hq * d..(hq + 1) * d], &marker[g * d..(g + 1) * d]);
+            assert!(cos > 0.95, "head {hq}: cos {cos}");
+        }
+    }
+}

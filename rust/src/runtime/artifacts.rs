@@ -1,0 +1,262 @@
+//! Artifact manifest: the AOT contract between `python/compile/aot.py`
+//! and the Rust runtime. Parses `artifacts/manifest.json`, loads weight
+//! blobs, and resolves (preset, batch, name) -> HLO file path + signature.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelSpec;
+use crate::runtime::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub preset: String,
+    pub batch: usize,
+    pub name: String,
+    pub path: PathBuf,
+    /// Input shapes/dtypes in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Names of the trailing weight arguments (manifest `weight_args`).
+    pub weight_args: Vec<String>,
+    pub n_outputs: usize,
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactMeta {
+    /// Number of leading dynamic (non-weight) arguments.
+    pub fn n_dynamic(&self) -> usize {
+        self.inputs.len() - self.weight_args.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetInfo {
+    pub spec: ModelSpec,
+    pub weights_path: PathBuf,
+    pub weight_index: Vec<(String, Vec<usize>, usize, usize)>, // name, shape, offset, nbytes
+    pub ranks: Vec<usize>,
+    pub ncaps: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub defaults: HashMap<String, usize>,
+    pub prefill_chunk: usize,
+    pub prefill_ncap: usize,
+}
+
+pub struct Manifest {
+    pub root: PathBuf,
+    pub presets: HashMap<String, PresetInfo>,
+    artifacts: HashMap<(String, usize, String), ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(root: P) -> anyhow::Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(root.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest in {root:?}: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let mut presets = HashMap::new();
+        for (pname, stanza) in j.req("presets")?.as_obj().unwrap_or(&[]) {
+            let spec = ModelSpec::from_json(stanza.req("model")?)?;
+            let w = stanza.req("weights")?;
+            let weight_index = w
+                .req("tensors")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok((
+                        t.req("name")?.as_str().unwrap_or("").to_string(),
+                        t.req("shape")?.usize_vec()?,
+                        t.req("offset")?.as_usize().unwrap_or(0),
+                        t.req("nbytes")?.as_usize().unwrap_or(0),
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let defaults = stanza
+                .req("defaults")?
+                .as_obj()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                .collect();
+            let prefill = stanza.req("prefill")?;
+            presets.insert(
+                pname.clone(),
+                PresetInfo {
+                    spec,
+                    weights_path: root.join(w.req("path")?.as_str().unwrap_or("")),
+                    weight_index,
+                    ranks: stanza.req("ranks")?.usize_vec()?,
+                    ncaps: stanza.req("ncaps")?.usize_vec()?,
+                    batches: stanza.req("batches")?.usize_vec()?,
+                    defaults,
+                    prefill_chunk: prefill.usize_or("chunk", 128),
+                    prefill_ncap: prefill.usize_or("ncap", 2048),
+                },
+            );
+        }
+
+        let mut artifacts = HashMap::new();
+        for ent in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let meta = ArtifactMeta {
+                preset: ent.str_or("preset", ""),
+                batch: ent.usize_or("batch", 0),
+                name: ent.str_or("name", ""),
+                path: root.join(ent.str_or("path", "")),
+                inputs: ent
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        Ok((
+                            i.req("shape")?.usize_vec()?,
+                            i.str_or("dtype", "float32"),
+                        ))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                weight_args: ent
+                    .req("weight_args")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                    .collect(),
+                n_outputs: ent.usize_or("n_outputs", 1),
+                params: ent
+                    .req("params")?
+                    .as_obj()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                    .collect(),
+            };
+            artifacts.insert((meta.preset.clone(), meta.batch, meta.name.clone()), meta);
+        }
+
+        Ok(Manifest {
+            root,
+            presets,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, preset: &str, batch: usize, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(&(preset.to_string(), batch, name.to_string()))
+            .ok_or_else(|| {
+                anyhow::anyhow!("artifact not found: {preset}/b{batch}/{name} (rerun `make artifacts`?)")
+            })
+    }
+
+    pub fn has(&self, preset: &str, batch: usize, name: &str) -> bool {
+        self.artifacts
+            .contains_key(&(preset.to_string(), batch, name.to_string()))
+    }
+
+    pub fn artifact_names(&self, preset: &str, batch: usize) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .keys()
+            .filter(|(p, b, _)| p == preset && *b == batch)
+            .map(|(_, _, n)| n.clone())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Load every weight tensor (plus SVD adapters) for a preset.
+    pub fn load_weights(&self, preset: &str) -> anyhow::Result<HashMap<String, Tensor>> {
+        let info = self
+            .presets
+            .get(preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
+        let blob = std::fs::read(&info.weights_path)?;
+        let mut out = HashMap::new();
+        for (name, shape, offset, nbytes) in &info.weight_index {
+            let bytes = blob
+                .get(*offset..offset + nbytes)
+                .ok_or_else(|| anyhow::anyhow!("weight {name} out of blob bounds"))?;
+            out.insert(name.clone(), Tensor::from_le_bytes(shape, bytes));
+        }
+        Ok(out)
+    }
+}
+
+/// Locate the artifacts directory: $KVSWAP_ARTIFACTS or ./artifacts
+/// relative to the crate root / CWD.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KVSWAP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_dir.join("manifest.json").exists() {
+        return manifest_dir;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn built() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(m) = built() else { return };
+        assert!(m.presets.contains_key("nano"));
+        let info = &m.presets["nano"];
+        assert_eq!(info.spec.kv_flat_dim(), 128);
+        assert!(info.ranks.contains(&16));
+        let meta = m.get("nano", 1, "decode_p272").unwrap();
+        assert_eq!(meta.n_outputs, 3);
+        assert_eq!(meta.weight_args.len(), 9);
+        assert_eq!(meta.n_dynamic(), 5);
+        assert!(meta.path.exists());
+    }
+
+    #[test]
+    fn loads_weights_with_adapters() {
+        let Some(m) = built() else { return };
+        let w = m.load_weights("nano").unwrap();
+        assert!(w.contains_key("emb"));
+        assert!(w.contains_key("layer0.wq"));
+        assert!(w.contains_key("layer0.A16"));
+        let spec = &m.presets["nano"].spec;
+        assert_eq!(
+            w["layer0.wq"].shape,
+            vec![spec.d_model, spec.q_flat_dim()]
+        );
+        assert_eq!(w["layer0.A16"].shape, vec![spec.kv_flat_dim(), 16]);
+        // adapters are orthonormal: A^T A = I
+        let a = &w["layer0.A16"];
+        let (hd, r) = (a.shape[0], a.shape[1]);
+        for i in 0..r {
+            for j in 0..r {
+                let mut dot = 0.0f32;
+                for k in 0..hd {
+                    dot += a.data[k * r + i] * a.data[k * r + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-3, "gram[{i}][{j}]={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let Some(m) = built() else { return };
+        let err = m.get("nano", 1, "nonexistent").unwrap_err().to_string();
+        assert!(err.contains("nonexistent"));
+    }
+}

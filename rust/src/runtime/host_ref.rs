@@ -1,0 +1,531 @@
+//! Pure-Rust f32 reference transformer — the host-side oracle.
+//!
+//! Mirrors `python/compile/model.py` exactly (RMSNorm / RoPE / GQA /
+//! SwiGLU, same weight tensors). Used by integration tests to validate
+//! the HLO artifacts' numerics end-to-end, by the quality harness as the
+//! Full-KV oracle, and by unit tests that need model-shaped data without
+//! a PJRT client. Everything here is per-sequence (no batch dim).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::ModelSpec;
+use crate::runtime::tensor::Tensor;
+use crate::util::mathx;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Per-layer KV cache rows: token-major, row = all KV heads concatenated
+/// (`Hkv * d` floats) — the same flattened layout §3.2 compresses and the
+/// disk layout stores.
+#[derive(Debug, Clone, Default)]
+pub struct KvLayer {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub row: usize,
+}
+
+impl KvLayer {
+    pub fn new(row: usize) -> KvLayer {
+        KvLayer {
+            k: Vec::new(),
+            v: Vec::new(),
+            row,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k.len() / self.row
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.row);
+        assert_eq!(v.len(), self.row);
+        self.k.extend_from_slice(k);
+        self.v.extend_from_slice(v);
+    }
+
+    pub fn k_row(&self, n: usize) -> &[f32] {
+        &self.k[n * self.row..(n + 1) * self.row]
+    }
+
+    pub fn v_row(&self, n: usize) -> &[f32] {
+        &self.v[n * self.row..(n + 1) * self.row]
+    }
+}
+
+pub struct HostModel {
+    pub spec: ModelSpec,
+    pub weights: Rc<HashMap<String, Tensor>>,
+}
+
+impl HostModel {
+    pub fn new(spec: ModelSpec, weights: Rc<HashMap<String, Tensor>>) -> HostModel {
+        HostModel { spec, weights }
+    }
+
+    fn w(&self, name: &str) -> &Tensor {
+        self.weights
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"))
+    }
+
+    fn lw(&self, layer: usize, t: &str) -> &Tensor {
+        self.w(&format!("layer{layer}.{t}"))
+    }
+
+    pub fn rmsnorm(&self, x: &[f32], g: &[f32]) -> Vec<f32> {
+        let mean_sq = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        let r = 1.0 / (mean_sq + self.spec.rms_eps as f32).sqrt();
+        x.iter().zip(g).map(|(v, gg)| v * r * gg).collect()
+    }
+
+    /// RoPE on one head vector (length d, d even), matching model.rope.
+    pub fn rope_head(&self, x: &mut [f32], pos: i32) {
+        let d = x.len();
+        let half = d / 2;
+        let base = self.spec.rope_base as f32;
+        for j in 0..half {
+            let freq = base.powf(-(j as f32) / half as f32);
+            let angle = pos as f32 * freq;
+            let (sin, cos) = angle.sin_cos();
+            let x1 = x[j];
+            let x2 = x[j + half];
+            x[j] = x1 * cos - x2 * sin;
+            x[j + half] = x1 * sin + x2 * cos;
+        }
+    }
+
+    fn rope_all_heads(&self, x: &mut [f32], pos: i32) {
+        let d = self.spec.head_dim;
+        for h in 0..(x.len() / d) {
+            self.rope_head(&mut x[h * d..(h + 1) * d], pos);
+        }
+    }
+
+    pub fn embed(&self, token: i32) -> Vec<f32> {
+        self.w("emb").row(&[token as usize]).to_vec()
+    }
+
+    /// Project x through one layer's QKV; returns (q roped [Hq*d],
+    /// k_new roped [Hkv*d], v_new [Hkv*d]).
+    pub fn qkv(&self, layer: usize, x: &[f32], pos: i32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let spec = &self.spec;
+        let h = self.rmsnorm(x, &self.lw(layer, "ln1").data);
+        let mut q = vec![0.0; spec.q_flat_dim()];
+        let mut k = vec![0.0; spec.kv_flat_dim()];
+        let mut v = vec![0.0; spec.kv_flat_dim()];
+        mathx::matmul(&h, &self.lw(layer, "wq").data, 1, spec.d_model, spec.q_flat_dim(), &mut q);
+        mathx::matmul(&h, &self.lw(layer, "wk").data, 1, spec.d_model, spec.kv_flat_dim(), &mut k);
+        mathx::matmul(&h, &self.lw(layer, "wv").data, 1, spec.d_model, spec.kv_flat_dim(), &mut v);
+        self.rope_all_heads(&mut q, pos);
+        self.rope_all_heads(&mut k, pos);
+        (q, k, v)
+    }
+
+    /// GQA attention of `q` over KV rows, with an optional per-row
+    /// validity mask. Returns [Hq*d].
+    pub fn attention(
+        &self,
+        q: &[f32],
+        k_rows: &[&[f32]],
+        v_rows: &[&[f32]],
+        valid: Option<&[bool]>,
+    ) -> Vec<f32> {
+        let spec = &self.spec;
+        let d = spec.head_dim;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n = k_rows.len();
+        let mut out = vec![0.0; spec.q_flat_dim()];
+        let mut scores = vec![0.0f32; n];
+        for hq in 0..spec.n_q_heads {
+            let g = hq / spec.n_rep();
+            let qh = &q[hq * d..(hq + 1) * d];
+            for (i, krow) in k_rows.iter().enumerate() {
+                let ok = valid.map(|m| m[i]).unwrap_or(true);
+                scores[i] = if ok {
+                    mathx::dot(qh, &krow[g * d..(g + 1) * d]) * scale
+                } else {
+                    NEG_INF
+                };
+            }
+            mathx::softmax(&mut scores);
+            let oh = &mut out[hq * d..(hq + 1) * d];
+            for (i, vrow) in v_rows.iter().enumerate() {
+                let w = scores[i];
+                if w == 0.0 {
+                    continue;
+                }
+                for (o, vv) in oh.iter_mut().zip(&vrow[g * d..(g + 1) * d]) {
+                    *o += w * vv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Full transformer block over explicit KV rows (the current token's
+    /// KV is computed internally and appended, like decode_block_fn).
+    /// Returns (x_next, k_new, v_new).
+    pub fn block(
+        &self,
+        layer: usize,
+        x: &[f32],
+        k_rows: &[&[f32]],
+        v_rows: &[&[f32]],
+        valid: Option<&[bool]>,
+        pos: i32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let spec = &self.spec;
+        let (q, k_new, v_new) = self.qkv(layer, x, pos);
+        let mut krows: Vec<&[f32]> = k_rows.to_vec();
+        let mut vrows: Vec<&[f32]> = v_rows.to_vec();
+        krows.push(&k_new);
+        vrows.push(&v_new);
+        let valid_ext: Option<Vec<bool>> = valid.map(|m| {
+            let mut v = m.to_vec();
+            v.push(true);
+            v
+        });
+        let o = self.attention(&q, &krows, &vrows, valid_ext.as_deref());
+        let mut x1 = x.to_vec();
+        let mut proj = vec![0.0; spec.d_model];
+        mathx::matmul(&o, &self.lw(layer, "wo").data, 1, spec.q_flat_dim(), spec.d_model, &mut proj);
+        for (a, b) in x1.iter_mut().zip(&proj) {
+            *a += b;
+        }
+        // SwiGLU MLP
+        let h2 = self.rmsnorm(&x1, &self.lw(layer, "ln2").data);
+        let f = spec.d_ff;
+        let mut gate = vec![0.0; f];
+        let mut up = vec![0.0; f];
+        mathx::matmul(&h2, &self.lw(layer, "wg").data, 1, spec.d_model, f, &mut gate);
+        mathx::matmul(&h2, &self.lw(layer, "wu").data, 1, spec.d_model, f, &mut up);
+        for (g, u) in gate.iter_mut().zip(&up) {
+            let silu = *g / (1.0 + (-*g).exp());
+            *g = silu * u;
+        }
+        let mut down = vec![0.0; spec.d_model];
+        mathx::matmul(&gate, &self.lw(layer, "wd").data, 1, f, spec.d_model, &mut down);
+        for (a, b) in x1.iter_mut().zip(&down) {
+            *a += b;
+        }
+        (x1, k_new, v_new)
+    }
+
+    /// Full-KV oracle decode step over per-layer caches (appends new KV).
+    pub fn decode_step(&self, x0: &[f32], caches: &mut [KvLayer], pos: i32) -> Vec<f32> {
+        let mut x = x0.to_vec();
+        for layer in 0..self.spec.n_layers {
+            let cache = &caches[layer];
+            let n = cache.len();
+            let krows: Vec<&[f32]> = (0..n).map(|i| cache.k_row(i)).collect();
+            let vrows: Vec<&[f32]> = (0..n).map(|i| cache.v_row(i)).collect();
+            let (x1, k_new, v_new) = self.block(layer, &x, &krows, &vrows, None, pos);
+            x = x1;
+            caches[layer].push(&k_new, &v_new);
+        }
+        x
+    }
+
+    /// Full prefill: returns final hidden of each token and per-layer caches.
+    pub fn prefill(&self, tokens: &[i32]) -> (Vec<Vec<f32>>, Vec<KvLayer>) {
+        let spec = &self.spec;
+        let hd = spec.kv_flat_dim();
+        let mut caches: Vec<KvLayer> = (0..spec.n_layers).map(|_| KvLayer::new(hd)).collect();
+        let mut xs: Vec<Vec<f32>> = tokens.iter().map(|&t| self.embed(t)).collect();
+        for layer in 0..spec.n_layers {
+            let mut new_k: Vec<Vec<f32>> = Vec::with_capacity(tokens.len());
+            let mut new_v: Vec<Vec<f32>> = Vec::with_capacity(tokens.len());
+            let mut new_x: Vec<Vec<f32>> = Vec::with_capacity(tokens.len());
+            for (t, x) in xs.iter().enumerate() {
+                let krows: Vec<&[f32]> = new_k.iter().map(|r| r.as_slice()).collect();
+                let vrows: Vec<&[f32]> = new_v.iter().map(|r| r.as_slice()).collect();
+                let (x1, k_new, v_new) = self.block(layer, x, &krows, &vrows, None, t as i32);
+                new_k.push(k_new);
+                new_v.push(v_new);
+                new_x.push(x1);
+            }
+            for (k, v) in new_k.iter().zip(&new_v) {
+                caches[layer].push(k, v);
+            }
+            xs = new_x;
+        }
+        (xs, caches)
+    }
+
+    /// Predictor oracle: head-summed low-rank token scores (§3.3, Eq. 1).
+    /// `adapter` is [Hkv*d, r] row-major; `k_lr` rows are [r].
+    pub fn predict_scores(
+        &self,
+        layer: usize,
+        x: &[f32],
+        adapter: &Tensor,
+        k_lr_rows: &[&[f32]],
+        pos: i32,
+    ) -> Vec<f32> {
+        let spec = &self.spec;
+        let d = spec.head_dim;
+        let r = adapter.shape[1];
+        let h = self.rmsnorm(x, &self.lw(layer, "ln1").data);
+        let mut q = vec![0.0; spec.q_flat_dim()];
+        mathx::matmul(&h, &self.lw(layer, "wq").data, 1, spec.d_model, spec.q_flat_dim(), &mut q);
+        self.rope_all_heads(&mut q, pos);
+        // q_lr[h] = q_h @ A_{g(h)}  (A rows g*d..(g+1)*d)
+        let mut q_lr = vec![0.0; spec.n_q_heads * r];
+        for hq in 0..spec.n_q_heads {
+            let g = hq / spec.n_rep();
+            let qh = &q[hq * d..(hq + 1) * d];
+            let out = &mut q_lr[hq * r..(hq + 1) * r];
+            for (di, &qv) in qh.iter().enumerate() {
+                let arow = &adapter.data[(g * d + di) * r..(g * d + di + 1) * r];
+                for (o, a) in out.iter_mut().zip(arow) {
+                    *o += qv * a;
+                }
+            }
+        }
+        // head-summed scores per row
+        k_lr_rows
+            .iter()
+            .map(|row| {
+                let mut s = 0.0;
+                for hq in 0..spec.n_q_heads {
+                    s += mathx::dot(&q_lr[hq * r..(hq + 1) * r], row);
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Per-head predictor scores (no head aggregation — the InfiniGen
+    /// baseline's selection granularity): one score vector per query head.
+    pub fn predict_scores_per_head(
+        &self,
+        layer: usize,
+        x: &[f32],
+        adapter: &Tensor,
+        k_lr_rows: &[&[f32]],
+        pos: i32,
+    ) -> Vec<Vec<f32>> {
+        let spec = &self.spec;
+        let d = spec.head_dim;
+        let r = adapter.shape[1];
+        let h = self.rmsnorm(x, &self.lw(layer, "ln1").data);
+        let mut q = vec![0.0; spec.q_flat_dim()];
+        mathx::matmul(&h, &self.lw(layer, "wq").data, 1, spec.d_model, spec.q_flat_dim(), &mut q);
+        self.rope_all_heads(&mut q, pos);
+        (0..spec.n_q_heads)
+            .map(|hq| {
+                let g = hq / spec.n_rep();
+                let qh = &q[hq * d..(hq + 1) * d];
+                let mut q_lr = vec![0.0; r];
+                for (di, &qv) in qh.iter().enumerate() {
+                    let arow = &adapter.data[(g * d + di) * r..(g * d + di + 1) * r];
+                    for (o, a) in q_lr.iter_mut().zip(arow) {
+                        *o += qv * a;
+                    }
+                }
+                k_lr_rows.iter().map(|row| mathx::dot(&q_lr, row)).collect()
+            })
+            .collect()
+    }
+
+    /// Compress K rows to K_lr rows with the adapter: K_lr = K A.
+    pub fn compress_k(&self, adapter: &Tensor, k_row: &[f32]) -> Vec<f32> {
+        let r = adapter.shape[1];
+        let mut out = vec![0.0; r];
+        mathx::matmul(k_row, &adapter.data, 1, k_row.len(), r, &mut out);
+        out
+    }
+
+    pub fn logits_argmax(&self, x: &[f32]) -> (i32, f32) {
+        let spec = &self.spec;
+        let h = self.rmsnorm(x, &self.w("fln").data);
+        let emb = self.w("emb");
+        let mut best = (0i32, f32::NEG_INFINITY);
+        for v in 0..spec.vocab {
+            let logit = mathx::dot(&h, emb.row(&[v]));
+            if logit > best.1 {
+                best = (v as i32, logit);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 4,
+            d_ff: 32,
+            vocab: 32,
+            rope_base: 10000.0,
+            rms_eps: 1e-5,
+        }
+    }
+
+    fn tiny_model(seed: u64) -> HostModel {
+        let spec = tiny_spec();
+        let mut rng = Rng::new(seed);
+        let mut w = HashMap::new();
+        let base = 1.0 / (spec.d_model as f32).sqrt();
+        let mut norm = |shape: &[usize], std: f32| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(std)).collect())
+        };
+        w.insert("emb".into(), norm(&[spec.vocab, spec.d_model], base));
+        w.insert("fln".into(), Tensor::full(&[spec.d_model], 1.0));
+        for i in 0..spec.n_layers {
+            w.insert(format!("layer{i}.ln1"), Tensor::full(&[spec.d_model], 1.0));
+            w.insert(format!("layer{i}.ln2"), Tensor::full(&[spec.d_model], 1.0));
+            w.insert(format!("layer{i}.wq"), norm(&[spec.d_model, spec.q_flat_dim()], base));
+            w.insert(format!("layer{i}.wk"), norm(&[spec.d_model, spec.kv_flat_dim()], base));
+            w.insert(format!("layer{i}.wv"), norm(&[spec.d_model, spec.kv_flat_dim()], base));
+            w.insert(format!("layer{i}.wo"), norm(&[spec.q_flat_dim(), spec.d_model], base));
+            w.insert(format!("layer{i}.wg"), norm(&[spec.d_model, spec.d_ff], base));
+            w.insert(format!("layer{i}.wu"), norm(&[spec.d_model, spec.d_ff], base));
+            w.insert(format!("layer{i}.wd"), norm(&[spec.d_ff, spec.d_model], base));
+        }
+        HostModel::new(spec, Rc::new(w))
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_identity_at_zero() {
+        let m = tiny_model(0);
+        let mut x = vec![0.3, -0.7, 1.1, 0.5];
+        let orig = x.clone();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        m.rope_head(&mut x, 0);
+        assert_eq!(x, orig);
+        m.rope_head(&mut x, 57);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_single_row_returns_value() {
+        let m = tiny_model(1);
+        let d = m.spec.head_dim;
+        let q = vec![0.5; m.spec.q_flat_dim()];
+        let k = vec![0.1; m.spec.kv_flat_dim()];
+        let v: Vec<f32> = (0..m.spec.kv_flat_dim()).map(|i| i as f32).collect();
+        let out = m.attention(&q, &[&k], &[&v], None);
+        for hq in 0..m.spec.n_q_heads {
+            let g = hq / m.spec.n_rep();
+            assert_eq!(&out[hq * d..(hq + 1) * d], &v[g * d..(g + 1) * d]);
+        }
+    }
+
+    #[test]
+    fn attention_masked_rows_ignored() {
+        let m = tiny_model(2);
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = (0..m.spec.q_flat_dim()).map(|_| rng.normal_f32(1.0)).collect();
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..m.spec.kv_flat_dim()).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let valid = vec![true, true, true, false, false, false];
+        let out1 = m.attention(&q, &refs[..], &refs[..], Some(&valid));
+        let out2 = m.attention(&q, &refs[..3], &refs[..3], None);
+        for (a, b) in out1.iter().zip(&out2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn decode_step_appends_kv_and_changes_x() {
+        let m = tiny_model(3);
+        let mut caches: Vec<KvLayer> =
+            (0..m.spec.n_layers).map(|_| KvLayer::new(m.spec.kv_flat_dim())).collect();
+        let x0 = m.embed(5);
+        let x1 = m.decode_step(&x0, &mut caches, 0);
+        assert_eq!(caches[0].len(), 1);
+        assert_eq!(caches[1].len(), 1);
+        assert_ne!(x0, x1);
+        let x2 = m.decode_step(&x1, &mut caches, 1);
+        assert_eq!(caches[0].len(), 2);
+        assert_ne!(x1, x2);
+    }
+
+    #[test]
+    fn prefill_then_decode_consistent_with_streaming_decode() {
+        // Prefilling S tokens then decoding must equal decoding token-by-
+        // token from an empty cache (same math, different batching).
+        let m = tiny_model(4);
+        let tokens = [3, 11, 7, 19];
+        let (xs, caches) = m.prefill(&tokens);
+
+        let mut caches2: Vec<KvLayer> =
+            (0..m.spec.n_layers).map(|_| KvLayer::new(m.spec.kv_flat_dim())).collect();
+        let mut last_x = Vec::new();
+        for (t, &tok) in tokens.iter().enumerate() {
+            last_x = m.decode_step(&m.embed(tok), &mut caches2, t as i32);
+        }
+        for (a, b) in xs.last().unwrap().iter().zip(&last_x) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for l in 0..m.spec.n_layers {
+            assert_eq!(caches[l].len(), caches2[l].len());
+            for (a, b) in caches[l].k.iter().zip(&caches2[l].k) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn predict_scores_match_full_scores_with_identity_adapter() {
+        // With a full-rank orthonormal adapter (identity), predicted
+        // scores must equal the true head-summed q.k scores.
+        let m = tiny_model(5);
+        let hd = m.spec.kv_flat_dim();
+        let mut eye = Tensor::zeros(&[hd, hd]);
+        for i in 0..hd {
+            *eye.at_mut(&[i, i]) = 1.0;
+        }
+        let (_, caches) = m.prefill(&[1, 2, 3, 4, 5]);
+        let x = m.embed(9);
+        let layer = 1;
+        // K_lr with identity adapter == K rows themselves
+        let k_lr_rows: Vec<&[f32]> = (0..caches[layer].len()).map(|i| caches[layer].k_row(i)).collect();
+        let pred = m.predict_scores(layer, &x, &eye, &k_lr_rows, 5);
+        // true scores: q_h . k_row[g-slice]
+        let (q, _, _) = m.qkv(layer, &x, 5);
+        let d = m.spec.head_dim;
+        for (i, row) in k_lr_rows.iter().enumerate() {
+            let mut want = 0.0;
+            for hq in 0..m.spec.n_q_heads {
+                let g = hq / m.spec.n_rep();
+                want += mathx::dot(&q[hq * d..(hq + 1) * d], &row[g * d..(g + 1) * d]);
+            }
+            assert!((pred[i] - want).abs() < 1e-3, "{} vs {}", pred[i], want);
+        }
+    }
+
+    #[test]
+    fn logits_argmax_picks_max() {
+        let m = tiny_model(6);
+        let x = m.embed(4);
+        let (tok, top) = m.logits_argmax(&x);
+        assert!((0..m.spec.vocab as i32).contains(&tok));
+        // verify it is the max by recompute
+        let h = m.rmsnorm(&x, &m.w("fln").data);
+        let emb = m.w("emb");
+        for v in 0..m.spec.vocab {
+            assert!(mathx::dot(&h, emb.row(&[v])) <= top + 1e-6);
+        }
+    }
+}

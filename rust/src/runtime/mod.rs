@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client + AOT-artifact loading (the xla crate path:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute_b`), host tensors, and the pure-Rust reference transformer
+//! used as a numerics oracle.
+
+pub mod artifacts;
+pub mod host_ref;
+pub mod pjrt;
+pub mod tensor;
+
+pub use artifacts::{default_artifacts_dir, ArtifactMeta, Manifest};
+pub use host_ref::{HostModel, KvLayer};
+pub use pjrt::{literal_to_i32, literal_to_tensor, ModelRuntime, PjrtRuntime};
+pub use tensor::{HostArg, Tensor, TensorI32};

@@ -1,0 +1,450 @@
+//! PJRT execution layer: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, keeps model weights resident as device buffers, and
+//! exposes typed wrappers for each artifact family.
+//!
+//! Hot-path contract (DESIGN.md §4): weights are uploaded **once** per
+//! preset and passed to `execute_b` as persistent `PjRtBuffer`s; only the
+//! small dynamic tensors (activations, gathered KV, masks) are uploaded
+//! per call. Python is never involved.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use super::tensor::{HostArg, Tensor, TensorI32};
+
+/// Cumulative timing of runtime activity, for the perf breakdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RuntimeTiming {
+    pub upload: Duration,
+    pub execute: Duration,
+    pub download: Duration,
+    pub compile: Duration,
+    pub calls: u64,
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<(String, usize, String), Rc<xla::PjRtLoadedExecutable>>>,
+    /// preset -> weight name -> device buffer (uploaded once).
+    weight_bufs: RefCell<HashMap<String, Rc<HashMap<String, xla::PjRtBuffer>>>>,
+    /// preset -> host copy of the weights (kept for host_ref oracles).
+    host_weights: RefCell<HashMap<String, Rc<HashMap<String, Tensor>>>>,
+    timing: RefCell<RuntimeTiming>,
+}
+
+impl PjrtRuntime {
+    pub fn new(manifest: Manifest) -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+            host_weights: RefCell::new(HashMap::new()),
+            timing: RefCell::new(RuntimeTiming::default()),
+        })
+    }
+
+    pub fn timing(&self) -> RuntimeTiming {
+        *self.timing.borrow()
+    }
+
+    pub fn reset_timing(&self) {
+        *self.timing.borrow_mut() = RuntimeTiming::default();
+    }
+
+    /// Host-side weights for a preset (loads + caches on first use).
+    pub fn host_weights(&self, preset: &str) -> anyhow::Result<Rc<HashMap<String, Tensor>>> {
+        if let Some(w) = self.host_weights.borrow().get(preset) {
+            return Ok(w.clone());
+        }
+        let w = Rc::new(self.manifest.load_weights(preset)?);
+        self.host_weights
+            .borrow_mut()
+            .insert(preset.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Device-resident weight buffers for a preset (uploads on first use).
+    fn weight_buffers(
+        &self,
+        preset: &str,
+    ) -> anyhow::Result<Rc<HashMap<String, xla::PjRtBuffer>>> {
+        if let Some(b) = self.weight_bufs.borrow().get(preset) {
+            return Ok(b.clone());
+        }
+        let host = self.host_weights(preset)?;
+        let t0 = Instant::now();
+        let mut bufs = HashMap::new();
+        for (name, tensor) in host.iter() {
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&tensor.data, &tensor.shape, None)
+                .map_err(|e| anyhow::anyhow!("upload weight {name}: {e:?}"))?;
+            bufs.insert(name.clone(), buf);
+        }
+        self.timing.borrow_mut().upload += t0.elapsed();
+        let rc = Rc::new(bufs);
+        self.weight_bufs
+            .borrow_mut()
+            .insert(preset.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-upload a preset's weights to device buffers (warmup path).
+    pub fn warm_weights(&self, preset: &str) -> anyhow::Result<()> {
+        self.weight_buffers(preset).map(|_| ())
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(
+        &self,
+        preset: &str,
+        batch: usize,
+        name: &str,
+    ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (preset.to_string(), batch, name.to_string());
+        if let Some(e) = self.exes.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.get(preset, batch, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse hlo {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.timing.borrow_mut().compile += t0.elapsed();
+        crate::log_debug!(
+            "compiled {preset}/b{batch}/{name} in {:?}",
+            t0.elapsed()
+        );
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// How many executables have been compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn upload_arg(&self, arg: &HostArg) -> anyhow::Result<xla::PjRtBuffer> {
+        let buf = match arg {
+            HostArg::F32(t) => self
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None),
+            HostArg::I32(t) => self
+                .client
+                .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None),
+        };
+        buf.map_err(|e| anyhow::anyhow!("upload arg: {e:?}"))
+    }
+
+    /// Resolve the weight-argument names of an artifact to buffer keys.
+    /// `layer` substitutes per-layer tensors; `rank` picks the adapter.
+    fn weight_keys(
+        meta: &ArtifactMeta,
+        layer: Option<usize>,
+        rank: Option<usize>,
+    ) -> anyhow::Result<Vec<String>> {
+        meta.weight_args
+            .iter()
+            .map(|w| match w.as_str() {
+                "emb" => Ok("emb".to_string()),
+                "fln" => Ok("fln".to_string()),
+                "A" => {
+                    let l = layer.ok_or_else(|| anyhow::anyhow!("{}: layer required", meta.name))?;
+                    let r = rank.ok_or_else(|| anyhow::anyhow!("{}: rank required", meta.name))?;
+                    Ok(format!("layer{l}.A{r}"))
+                }
+                t => {
+                    let l = layer.ok_or_else(|| anyhow::anyhow!("{}: layer required", meta.name))?;
+                    Ok(format!("layer{l}.{t}"))
+                }
+            })
+            .collect()
+    }
+
+    /// Execute an artifact: dynamic args uploaded per call, weight args
+    /// resolved to the persistent buffers. Returns decomposed outputs.
+    pub fn exec(
+        &self,
+        preset: &str,
+        batch: usize,
+        name: &str,
+        dynamic: &[HostArg],
+        layer: Option<usize>,
+        rank: Option<usize>,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let meta = self.manifest.get(preset, batch, name)?.clone();
+        anyhow::ensure!(
+            dynamic.len() == meta.n_dynamic(),
+            "{name}: expected {} dynamic args, got {}",
+            meta.n_dynamic(),
+            dynamic.len()
+        );
+        // shape-check against the manifest: catches mis-wired callers early
+        for (i, arg) in dynamic.iter().enumerate() {
+            anyhow::ensure!(
+                arg.shape() == &meta.inputs[i].0[..],
+                "{name}: arg {i} shape {:?} != manifest {:?}",
+                arg.shape(),
+                meta.inputs[i].0
+            );
+        }
+        let exe = self.executable(preset, batch, name)?;
+        let wbufs = self.weight_buffers(preset)?;
+        let wkeys = Self::weight_keys(&meta, layer, rank)?;
+
+        let t0 = Instant::now();
+        let mut dyn_bufs = Vec::with_capacity(dynamic.len());
+        for a in dynamic {
+            dyn_bufs.push(self.upload_arg(a)?);
+        }
+        let t_upload = t0.elapsed();
+
+        let mut args: Vec<&xla::PjRtBuffer> = dyn_bufs.iter().collect();
+        for k in &wkeys {
+            args.push(
+                wbufs
+                    .get(k)
+                    .ok_or_else(|| anyhow::anyhow!("missing weight buffer {k}"))?,
+            );
+        }
+
+        let t1 = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let t_exec = t1.elapsed();
+
+        let t2 = Instant::now();
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download {name}: {e:?}"))?;
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        let t_dl = t2.elapsed();
+
+        let mut tm = self.timing.borrow_mut();
+        tm.upload += t_upload;
+        tm.execute += t_exec;
+        tm.download += t_dl;
+        tm.calls += 1;
+        anyhow::ensure!(
+            outs.len() == meta.n_outputs,
+            "{name}: expected {} outputs, got {}",
+            meta.n_outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+}
+
+/// Convert an output literal to a host f32 tensor with a known shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> anyhow::Result<Tensor> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal->f32: {e:?}"))?;
+    Ok(Tensor::from_vec(shape, v))
+}
+
+pub fn literal_to_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("literal->i32: {e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Typed model-level wrapper
+
+/// Typed facade over the artifacts of one (preset, batch): the engine's
+/// view of the model. All methods are single decode-step granular; the
+/// engine owns the loop and the KV state.
+pub struct ModelRuntime {
+    pub rt: Rc<PjrtRuntime>,
+    pub preset: String,
+    pub batch: usize,
+    pub p_sel: usize,
+}
+
+impl ModelRuntime {
+    pub fn new(rt: Rc<PjrtRuntime>, preset: &str, batch: usize) -> anyhow::Result<ModelRuntime> {
+        let p_sel = rt
+            .manifest
+            .presets
+            .get(preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?
+            .defaults
+            .get("p_sel")
+            .copied()
+            .unwrap_or(272);
+        Ok(ModelRuntime {
+            rt,
+            preset: preset.to_string(),
+            batch,
+            p_sel,
+        })
+    }
+
+    pub fn spec(&self) -> crate::config::ModelSpec {
+        self.rt.manifest.presets[&self.preset].spec.clone()
+    }
+
+    /// tokens [b] -> x [b, D]
+    pub fn embed(&self, tokens: &[i32]) -> anyhow::Result<Tensor> {
+        let spec = self.spec();
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            "embed",
+            &[TensorI32::vec1(tokens.to_vec()).into()],
+            None,
+            None,
+        )?;
+        literal_to_tensor(&outs[0], &[self.batch, spec.d_model])
+    }
+
+    /// One transformer block over gathered KV (width `p`; the artifact
+    /// named decode_p{p} or decode_full_n{p} must exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_block(
+        &self,
+        artifact: &str,
+        layer: usize,
+        x: Tensor,
+        k_sel: Tensor,
+        v_sel: Tensor,
+        mask: Tensor,
+        pos: &[i32],
+    ) -> anyhow::Result<(Tensor, Tensor, Tensor)> {
+        let spec = self.spec();
+        let (b, hkv, d) = (self.batch, spec.n_kv_heads, spec.head_dim);
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            artifact,
+            &[
+                x.into(),
+                k_sel.into(),
+                v_sel.into(),
+                mask.into(),
+                TensorI32::vec1(pos.to_vec()).into(),
+            ],
+            Some(layer),
+            None,
+        )?;
+        Ok((
+            literal_to_tensor(&outs[0], &[b, spec.d_model])?,
+            literal_to_tensor(&outs[1], &[b, hkv, d])?,
+            literal_to_tensor(&outs[2], &[b, hkv, d])?,
+        ))
+    }
+
+    /// Predictor: token scores for `layer`'s K cache from input `x`
+    /// (paper §3.3). `ncap`/`rank` select the compiled variant.
+    pub fn predict_scores(
+        &self,
+        layer: usize,
+        ncap: usize,
+        rank: usize,
+        x: Tensor,
+        k_lr: Tensor,
+        lens: &[i32],
+        pos: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        let name = format!("predict_n{ncap}_r{rank}");
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            &name,
+            &[
+                x.into(),
+                k_lr.into(),
+                TensorI32::vec1(lens.to_vec()).into(),
+                TensorI32::vec1(pos.to_vec()).into(),
+            ],
+            Some(layer),
+            Some(rank),
+        )?;
+        literal_to_tensor(&outs[0], &[self.batch, ncap])
+    }
+
+    /// x [b, D] -> (next tokens [b], top logits [b])
+    pub fn logits_argmax(&self, x: Tensor) -> anyhow::Result<(Vec<i32>, Vec<f32>)> {
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            "logits_argmax",
+            &[x.into()],
+            None,
+            None,
+        )?;
+        let toks = literal_to_i32(&outs[0])?;
+        let tops = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((toks, tops))
+    }
+
+    /// tokens [b, T] -> x [b, T, D]
+    pub fn embed_chunk(&self, tokens: &TensorI32, chunk: usize) -> anyhow::Result<Tensor> {
+        let spec = self.spec();
+        let name = format!("embed_chunk_t{chunk}");
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            &name,
+            &[tokens.clone().into()],
+            None,
+            None,
+        )?;
+        literal_to_tensor(&outs[0], &[self.batch, chunk, spec.d_model])
+    }
+
+    /// One prefill block over a chunk. Returns (x', k_chunk, v_chunk).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_block(
+        &self,
+        layer: usize,
+        chunk: usize,
+        ncap: usize,
+        x: Tensor,
+        k_cache: Tensor,
+        v_cache: Tensor,
+        start: &[i32],
+    ) -> anyhow::Result<(Tensor, Tensor, Tensor)> {
+        let spec = self.spec();
+        let name = format!("prefill_t{chunk}_n{ncap}");
+        let outs = self.rt.exec(
+            &self.preset,
+            self.batch,
+            &name,
+            &[
+                x.into(),
+                k_cache.into(),
+                v_cache.into(),
+                TensorI32::vec1(start.to_vec()).into(),
+            ],
+            Some(layer),
+            None,
+        )?;
+        Ok((
+            literal_to_tensor(&outs[0], &[self.batch, chunk, spec.d_model])?,
+            literal_to_tensor(&outs[1], &[self.batch, spec.n_kv_heads, chunk, spec.head_dim])?,
+            literal_to_tensor(&outs[2], &[self.batch, spec.n_kv_heads, chunk, spec.head_dim])?,
+        ))
+    }
+}

@@ -1,0 +1,222 @@
+//! Host-side tensors (f32 / i32) — the currency between the coordinator
+//! and the PJRT runtime. Row-major, shape-checked helpers only; all heavy
+//! math lives in the HLO artifacts (or `host_ref` for test oracles).
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Strides in elements (row-major).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        idx.iter()
+            .zip(&strides)
+            .zip(&self.shape)
+            .map(|((i, s), dim)| {
+                assert!(i < dim, "index {i} out of bound {dim}");
+                i * s
+            })
+            .sum()
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.offset(idx);
+        &mut self.data[o]
+    }
+
+    /// Contiguous row slice for the leading indices (all trailing dims).
+    pub fn row(&self, lead: &[usize]) -> &[f32] {
+        let tail: usize = self.shape[lead.len()..].iter().product();
+        let mut idx = lead.to_vec();
+        idx.extend(std::iter::repeat(0).take(self.shape.len() - lead.len()));
+        let off = self.offset(&idx);
+        &self.data[off..off + tail]
+    }
+
+    pub fn row_mut(&mut self, lead: &[usize]) -> &mut [f32] {
+        let tail: usize = self.shape[lead.len()..].iter().product();
+        let mut idx = lead.to_vec();
+        idx.extend(std::iter::repeat(0).take(self.shape.len() - lead.len()));
+        let off = self.offset(&idx);
+        &mut self.data[off..off + tail]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn from_le_bytes(shape: &[usize], bytes: &[u8]) -> Tensor {
+        assert_eq!(bytes.len() % 4, 0);
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::from_vec(shape, data)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> TensorI32 {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn vec1(data: Vec<i32>) -> TensorI32 {
+        TensorI32 {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+}
+
+/// An argument to an HLO executable.
+#[derive(Debug, Clone)]
+pub enum HostArg {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl From<Tensor> for HostArg {
+    fn from(t: Tensor) -> HostArg {
+        HostArg::F32(t)
+    }
+}
+
+impl From<TensorI32> for HostArg {
+    fn from(t: TensorI32) -> HostArg {
+        HostArg::I32(t)
+    }
+}
+
+impl HostArg {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostArg::F32(t) => &t.shape,
+            HostArg::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            HostArg::F32(t) => t.data.len() * 4,
+            HostArg::I32(t) => t.data.len() * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_strides() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        *t.at_mut(&[1, 2, 3]) = 5.0;
+        assert_eq!(t.at(&[1, 2, 3]), 5.0);
+        assert_eq!(t.data[23], 5.0);
+    }
+
+    #[test]
+    fn rows_are_contiguous_tails() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.row(&[0]), &[0.0, 1.0, 2.0]);
+        assert_eq!(t.row(&[1]), &[3.0, 4.0, 5.0]);
+        let t3 = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t3.row(&[1, 0]), &[4.0, 5.0]);
+        assert_eq!(t3.row(&[1]), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn row_mut_writes_through() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.row_mut(&[1]).copy_from_slice(&[7.0, 8.0]);
+        assert_eq!(t.data, vec![0.0, 0.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::from_vec(&[3], vec![1.0, -2.5, 3.25]);
+        let bytes: Vec<u8> = t.data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let back = Tensor::from_le_bytes(&[3], &bytes);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn host_arg_shapes() {
+        let a: HostArg = Tensor::zeros(&[2, 2]).into();
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.nbytes(), 16);
+        let b: HostArg = TensorI32::vec1(vec![1, 2, 3]).into();
+        assert_eq!(b.shape(), &[3]);
+    }
+}

@@ -1,0 +1,132 @@
+//! TCP serving front: newline-delimited JSON over a socket.
+//!
+//! Request:  {"id": 1, "context": 512, "decode": 32, "seed": 7}
+//!           (synthetic prompt derived from `seed`; or pass explicit
+//!            "tokens": [...])
+//! Response: {"id": 1, "tokens": [...], "latency_ms": 12.3, "batch": 4}
+//!
+//! The server forwards to the `Router` (engine thread) and streams
+//! completions back on the same connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::coordinator::router::{Completion, Router};
+use crate::util::json::Json;
+use crate::workload::tracegen::Request;
+
+pub fn parse_request(line: &str, fallback_id: u64) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    Ok(Request {
+        id: j.usize_or("id", fallback_id as usize) as u64,
+        context: j.usize_or("context", 512),
+        decode: j.usize_or("decode", 16),
+        arrival_s: 0.0,
+        seed: j.usize_or("seed", fallback_id as usize) as u64,
+    })
+}
+
+pub fn completion_to_json(c: &Completion) -> Json {
+    Json::from_pairs(vec![
+        ("id", (c.id as usize).into()),
+        (
+            "tokens",
+            Json::Arr(c.tokens.iter().map(|t| Json::Num(*t as f64)).collect()),
+        ),
+        ("latency_ms", c.latency_ms.into()),
+        ("batch", c.batch.into()),
+    ])
+}
+
+/// Serve one connection: read requests until EOF (or "flush"/"quit"
+/// lines), forward to the router, write completions back.
+pub fn handle_conn(stream: TcpStream, router: &Router) -> anyhow::Result<usize> {
+    let mut out = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut submitted = 0usize;
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if trimmed == "quit" {
+            break;
+        }
+        if trimmed == "flush" {
+            router.flush();
+            continue;
+        }
+        match parse_request(trimmed, i as u64) {
+            Ok(req) => {
+                router.submit(req);
+                submitted += 1;
+            }
+            Err(e) => {
+                let err = Json::from_pairs(vec![("error", e.as_str().into())]);
+                writeln!(out, "{err}")?;
+            }
+        }
+    }
+    router.flush();
+    for _ in 0..submitted {
+        let Some(c) = router.recv_timeout(std::time::Duration::from_secs(600)) else {
+            break;
+        };
+        writeln!(out, "{}", completion_to_json(&c))?;
+    }
+    Ok(submitted)
+}
+
+/// Accept loop (single connection at a time; the engine is the serial
+/// resource anyway).
+pub fn serve(addr: &str, router: &Router, max_conns: Option<usize>) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::log_info!("listening on {addr}");
+    let mut served = 0;
+    for stream in listener.incoming() {
+        let n = handle_conn(stream?, router)?;
+        crate::log_info!("connection done: {n} requests");
+        served += 1;
+        if let Some(m) = max_conns {
+            if served >= m {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full_and_defaults() {
+        let r = parse_request(r#"{"id": 3, "context": 256, "decode": 8, "seed": 9}"#, 0).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.context, 256);
+        assert_eq!(r.decode, 8);
+        assert_eq!(r.seed, 9);
+        let d = parse_request("{}", 42).unwrap();
+        assert_eq!(d.id, 42);
+        assert_eq!(d.context, 512);
+        assert!(parse_request("not json", 0).is_err());
+    }
+
+    #[test]
+    fn completion_json_shape() {
+        let c = Completion {
+            id: 7,
+            tokens: vec![1, 2, 3],
+            latency_ms: 4.5,
+            batch: 2,
+        };
+        let j = completion_to_json(&c);
+        let s = j.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.usize_or("id", 0), 7);
+        assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(back.f64_or("latency_ms", 0.0), 4.5);
+    }
+}

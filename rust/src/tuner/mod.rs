@@ -1,0 +1,17 @@
+//! Offline parameter tuning (paper §3.5 + Appendix A).
+//!
+//! Selects runtime parameters (compression ratio σ → rank r, group size
+//! G, selected groups M, reuse capacity C) under a memory budget B, by:
+//!  1. building lookup tables (C → reuse rate; σ → adapter) — `tables`
+//!  2. sampled profiling of T_io and T_model over (b, S) — `profiler`
+//!  3. a greedy solver that first fits σ to the budget, then grows G
+//!     until (1−α) of I/O hides under compute, reallocating budget to C
+//!     when G_max is insufficient — `solver`
+
+pub mod profiler;
+pub mod solver;
+pub mod tables;
+
+pub use profiler::{DelayModel, ProfileSample};
+pub use solver::{solve, Solution, SolverConfig};
+pub use tables::ReuseTable;

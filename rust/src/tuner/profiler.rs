@@ -1,0 +1,154 @@
+//! Sampled profiling (Appendix A.3): measure the I/O delay
+//! `T_io(b, MG, G, C)` and the model delay `T_model(b, MG, C, S, σ)` on
+//! the real engine over a sweep of (b, S) points, then interpolate — the
+//! paper profiles one representative transformer block; we profile
+//! single decode steps and divide.
+
+use std::collections::BTreeMap;
+
+use crate::disk::DiskProfile;
+
+/// One measured profile point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSample {
+    pub batch: usize,
+    pub context: usize,
+    pub group: usize,
+    pub rank: usize,
+    pub reuse_slots: usize,
+    /// Mean per-layer modeled I/O time (seconds).
+    pub t_io: f64,
+    /// Mean per-layer compute time (seconds): attention + predict share.
+    pub t_compute: f64,
+}
+
+/// Interpolating delay model over measured samples + an analytic fallback
+/// for unmeasured points (the paper interpolates too, A.3).
+#[derive(Debug, Default, Clone)]
+pub struct DelayModel {
+    /// samples keyed by (batch, context, group, rank, reuse)
+    samples: BTreeMap<(usize, usize, usize, usize, usize), ProfileSample>,
+}
+
+impl DelayModel {
+    pub fn add(&mut self, s: ProfileSample) {
+        self.samples
+            .insert((s.batch, s.context, s.group, s.rank, s.reuse_slots), s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Analytic I/O time per layer for a config — used to extrapolate
+    /// beyond measured points and by tests: `misses` groups of
+    /// `group_bytes` each, read as one extent per group.
+    pub fn analytic_t_io(
+        disk: &DiskProfile,
+        mg_entries: usize,
+        group: usize,
+        entry_bytes: usize,
+        reuse_rate: f64,
+    ) -> f64 {
+        if group == 0 {
+            return 0.0;
+        }
+        let n_groups = mg_entries / group.max(1);
+        let misses = (n_groups as f64 * (1.0 - reuse_rate)).ceil() as u64;
+        let group_bytes = (group * entry_bytes) as u64;
+        // queue-depth-aware batch (matches the engine's I/O thread)
+        let phys = misses * disk.physical_bytes(0, group_bytes);
+        disk.batched_read_time(phys, misses).as_secs_f64()
+    }
+
+    /// Nearest measured sample (exact match preferred, else nearest in
+    /// (batch, context) with matching group/rank), combined with analytic
+    /// scaling for the I/O part.
+    pub fn lookup(
+        &self,
+        batch: usize,
+        context: usize,
+        group: usize,
+        rank: usize,
+        reuse_slots: usize,
+    ) -> Option<ProfileSample> {
+        if let Some(s) = self.samples.get(&(batch, context, group, rank, reuse_slots)) {
+            return Some(s.clone());
+        }
+        // nearest neighbour by log-distance in (batch, context)
+        let mut best: Option<(f64, &ProfileSample)> = None;
+        for s in self.samples.values() {
+            if s.group != group || s.rank != rank {
+                continue;
+            }
+            let d = ((s.batch as f64 / batch as f64).ln().abs())
+                + ((s.context as f64 / context as f64).ln().abs())
+                + ((s.reuse_slots.max(1) as f64 / reuse_slots.max(1) as f64).ln().abs()) * 0.3;
+            if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                best = Some((d, s));
+            }
+        }
+        best.map(|(_, s)| {
+            let mut out = s.clone();
+            // compute scales ~linearly with batch; predict part with context
+            let bscale = batch as f64 / s.batch as f64;
+            let cscale = context as f64 / s.context as f64;
+            out.batch = batch;
+            out.context = context;
+            out.reuse_slots = reuse_slots;
+            out.t_compute *= bscale * (0.6 + 0.4 * cscale);
+            out.t_io *= bscale;
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(b: usize, s: usize, io: f64, comp: f64) -> ProfileSample {
+        ProfileSample {
+            batch: b,
+            context: s,
+            group: 4,
+            rank: 16,
+            reuse_slots: 64,
+            t_io: io,
+            t_compute: comp,
+        }
+    }
+
+    #[test]
+    fn exact_match_returned() {
+        let mut m = DelayModel::default();
+        m.add(sample(2, 1024, 0.01, 0.02));
+        let s = m.lookup(2, 1024, 4, 16, 64).unwrap();
+        assert_eq!(s.t_io, 0.01);
+        assert_eq!(s.t_compute, 0.02);
+    }
+
+    #[test]
+    fn nearest_neighbour_scales_with_batch() {
+        let mut m = DelayModel::default();
+        m.add(sample(1, 1024, 0.01, 0.02));
+        let s = m.lookup(4, 1024, 4, 16, 64).unwrap();
+        assert!((s.t_io - 0.04).abs() < 1e-9);
+        assert!(s.t_compute > 0.02);
+        assert!(m.lookup(4, 1024, 8, 16, 64).is_none()); // group mismatch
+    }
+
+    #[test]
+    fn analytic_io_decreases_with_grouping_and_reuse() {
+        let d = DiskProfile::emmc();
+        let t_g1 = DelayModel::analytic_t_io(&d, 256, 1, 1024, 0.0);
+        let t_g8 = DelayModel::analytic_t_io(&d, 256, 8, 1024, 0.0);
+        assert!(t_g1 > t_g8 * 3.0, "{t_g1} vs {t_g8}");
+        let t_reuse = DelayModel::analytic_t_io(&d, 256, 8, 1024, 0.75);
+        assert!(t_reuse < t_g8 * 0.35);
+    }
+}

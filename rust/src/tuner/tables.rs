@@ -1,0 +1,116 @@
+//! Precomputed lookup tables (Appendix A.1): reuse-buffer capacity C →
+//! expected reuse rate. The paper shows reuse rates are largely
+//! input-invariant (Tab. 5, std ≤ 1.1%), which justifies storing the
+//! average per C; we build the table from measured engine runs or from
+//! the locality model below.
+
+use crate::util::json::Json;
+
+/// C (slots, group granularity) → expected reuse hit rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReuseTable {
+    /// (capacity, rate) pairs, capacity-ascending.
+    pub entries: Vec<(usize, f64)>,
+}
+
+impl ReuseTable {
+    pub fn new(mut entries: Vec<(usize, f64)>) -> ReuseTable {
+        entries.sort_by_key(|e| e.0);
+        ReuseTable { entries }
+    }
+
+    /// Analytic locality model used when no measurements are available:
+    /// with per-step selection overlap `rho` (paper Fig. 8: ~0.75) and M
+    /// selected groups, a buffer of C slots retains roughly the last
+    /// C/M selections worth of groups; the hit rate saturates at the
+    /// overlap as C grows past M.
+    pub fn from_locality_model(m_groups: usize, rho: f64, caps: &[usize]) -> ReuseTable {
+        let entries = caps
+            .iter()
+            .map(|&c| {
+                let depth = c as f64 / m_groups.max(1) as f64;
+                // geometric retention: rate = rho * (1 - (1-depth)^+ ...)
+                let rate = if depth >= 1.0 {
+                    rho
+                } else {
+                    rho * depth
+                };
+                (c, rate.clamp(0.0, 1.0))
+            })
+            .collect();
+        ReuseTable::new(entries)
+    }
+
+    /// Interpolated rate for a capacity.
+    pub fn rate(&self, c: usize) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        if c <= self.entries[0].0 {
+            return self.entries[0].1 * c as f64 / self.entries[0].0.max(1) as f64;
+        }
+        for w in self.entries.windows(2) {
+            let (c0, r0) = w[0];
+            let (c1, r1) = w[1];
+            if c <= c1 {
+                let t = (c - c0) as f64 / (c1 - c0).max(1) as f64;
+                return r0 + (r1 - r0) * t;
+            }
+        }
+        self.entries.last().unwrap().1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|(c, r)| {
+                    Json::from_pairs(vec![("c", (*c).into()), ("rate", (*r).into())])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> ReuseTable {
+        ReuseTable::new(
+            j.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|e| (e.usize_or("c", 0), e.f64_or("rate", 0.0)))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locality_model_saturates_at_overlap() {
+        let t = ReuseTable::from_locality_model(64, 0.77, &[16, 32, 64, 128, 256]);
+        assert!(t.rate(16) < t.rate(64));
+        assert!((t.rate(128) - 0.77).abs() < 1e-9);
+        assert!((t.rate(9999) - 0.77).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolation_is_monotone() {
+        let t = ReuseTable::new(vec![(10, 0.2), (100, 0.8)]);
+        let mut prev = 0.0;
+        for c in [1, 10, 30, 55, 100, 500] {
+            let r = t.rate(c);
+            assert!(r >= prev - 1e-12, "c={c}");
+            prev = r;
+        }
+        assert!((t.rate(55) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = ReuseTable::new(vec![(8, 0.3), (64, 0.75)]);
+        let j = t.to_json();
+        let back = ReuseTable::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! typed accessors with defaults; every binary and bench in the repo uses
+//! this for its knobs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--batches 1,2,4`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.options.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.options.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("serve --preset nano --batch 8 trace.json");
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.str_or("preset", "x"), "nano");
+        assert_eq!(a.usize_or("batch", 1), 8);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("--mode=virtual --verbose --scale=0.5");
+        assert_eq!(a.str_or("mode", ""), "virtual");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.f64_or("scale", 1.0), 0.5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v --c");
+        assert!(a.flag("a"));
+        assert_eq!(a.str_or("b", ""), "v");
+        assert!(a.flag("c"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--batches 1,2,8 --disks nvme,emmc");
+        assert_eq!(a.usize_list_or("batches", &[]), vec![1, 2, 8]);
+        assert_eq!(a.str_list_or("disks", &[]), vec!["nvme", "emmc"]);
+        assert_eq!(a.usize_list_or("missing", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("x", 7), 7);
+        assert_eq!(a.str_or("y", "d"), "d");
+        assert_eq!(a.u64_or("seed", 3), 3);
+    }
+}

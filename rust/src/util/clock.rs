@@ -1,0 +1,143 @@
+//! Clock abstraction: real time vs virtual (modeled) time.
+//!
+//! The disk substrate charges I/O time against a `Clock`. In **real**
+//! mode, waits actually sleep (optionally scaled), so the serving example
+//! behaves like a device with that storage attached. In **virtual** mode,
+//! waits only advance a counter — large bench sweeps combine *measured*
+//! PJRT compute time with *modeled* disk time in seconds of virtual time,
+//! which is how throughput tables are produced quickly (DESIGN.md §2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone)]
+pub enum Clock {
+    /// Wall-clock; `advance` sleeps for `scale * dur`.
+    Real { start: Instant, scale: f64 },
+    /// Virtual nanosecond counter; `advance` just adds.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    pub fn real() -> Clock {
+        Clock::Real {
+            start: Instant::now(),
+            scale: 1.0,
+        }
+    }
+
+    /// Real clock with sleep scaling (0.1 = waits run 10x faster; useful
+    /// for demos on slow simulated disks).
+    pub fn real_scaled(scale: f64) -> Clock {
+        Clock::Real {
+            start: Instant::now(),
+            scale,
+        }
+    }
+
+    pub fn virtual_() -> Clock {
+        Clock::Virtual(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+
+    /// Nanoseconds since clock creation (virtual: accumulated).
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Real { start, .. } => start.elapsed().as_nanos() as u64,
+            Clock::Virtual(ns) => ns.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn now_secs(&self) -> f64 {
+        self.now_ns() as f64 / 1e9
+    }
+
+    /// Charge `dur` of modeled time: sleep (real) or bump counter (virtual).
+    pub fn advance(&self, dur: Duration) {
+        match self {
+            Clock::Real { scale, .. } => {
+                if *scale > 0.0 {
+                    std::thread::sleep(dur.mul_f64(*scale));
+                }
+            }
+            Clock::Virtual(ns) => {
+                ns.fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Charge measured real time onto a virtual clock (no-op on real —
+    /// the time already passed). Used to fold PJRT compute durations into
+    /// virtual-time throughput accounting.
+    pub fn absorb_measured(&self, dur: Duration) {
+        if let Clock::Virtual(ns) = self {
+            ns.fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// On a virtual clock: account `a` and `b` running concurrently
+    /// (advance by max); the paper's compute/I-O overlap accounting.
+    pub fn advance_overlapped(&self, a: Duration, b: Duration) {
+        self.advance(a.max(b));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_accumulates() {
+        let c = Clock::virtual_();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(Duration::from_millis(5));
+        c.advance(Duration::from_millis(7));
+        assert_eq!(c.now_ns(), 12_000_000);
+    }
+
+    #[test]
+    fn virtual_overlap_takes_max() {
+        let c = Clock::virtual_();
+        c.advance_overlapped(Duration::from_millis(10), Duration::from_millis(4));
+        assert_eq!(c.now_ns(), 10_000_000);
+    }
+
+    #[test]
+    fn real_clock_monotone_and_sleeps() {
+        let c = Clock::real();
+        let t0 = c.now_ns();
+        c.advance(Duration::from_millis(2));
+        assert!(c.now_ns() >= t0 + 1_500_000);
+    }
+
+    #[test]
+    fn scaled_real_clock_sleeps_less() {
+        let c = Clock::real_scaled(0.0);
+        let t0 = Instant::now();
+        c.advance(Duration::from_millis(500));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn absorb_only_affects_virtual() {
+        let v = Clock::virtual_();
+        v.absorb_measured(Duration::from_millis(3));
+        assert_eq!(v.now_ns(), 3_000_000);
+        let r = Clock::real();
+        let before = r.now_ns();
+        r.absorb_measured(Duration::from_secs(100));
+        assert!(r.now_ns() - before < 1_000_000_000);
+    }
+
+    #[test]
+    fn clone_shares_virtual_state() {
+        let c = Clock::virtual_();
+        let c2 = c.clone();
+        c.advance(Duration::from_millis(1));
+        assert_eq!(c2.now_ns(), 1_000_000);
+    }
+}

@@ -1,0 +1,226 @@
+//! Small numeric helpers shared across the coordinator: f32 tensor ops for
+//! host-side math (group reduce-max, top-k, matmul for K-cache compression,
+//! softmax for quality metrics), plus summary statistics.
+
+/// Row-major f32 matmul: a [m,k] x b [k,n] -> out [m,n].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // ikj loop order: streams b rows, vectorizes the inner j loop.
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Per-group max over `scores`, groups of `g` consecutive entries
+/// (paper §3.3 ReduceMax). Tail group may be partial.
+pub fn group_max(scores: &[f32], g: usize) -> Vec<f32> {
+    assert!(g > 0);
+    scores
+        .chunks(g)
+        .map(|c| c.iter().cloned().fold(f32::NEG_INFINITY, f32::max))
+        .collect()
+}
+
+/// Indices of the `k` largest values (descending). Deterministic: ties
+/// break toward the lower index.
+pub fn top_k_indices(vals: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(vals.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut top = idx[..k].to_vec();
+    top.sort_by(|&a, &b| {
+        vals[b]
+            .partial_cmp(&vals[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    top
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn l2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity; 0 when either vector is ~zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = l2(a);
+    let nb = l2(b);
+    if na < 1e-12 || nb < 1e-12 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// Relative L2 error ||a-b|| / ||b||.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt();
+    num / l2(b).max(1e-12)
+}
+
+/// Mean / std / min / max summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+        };
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Percentile (linear interpolation), q in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let eye = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let mut out = vec![0.0; 12];
+        matmul(&a, &eye, 4, 3, 3, &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn group_max_basic_and_tail() {
+        let s = [1.0, 5.0, 2.0, 8.0, 3.0];
+        assert_eq!(group_max(&s, 2), vec![5.0, 8.0, 3.0]);
+        assert_eq!(group_max(&s, 5), vec![8.0]);
+        assert_eq!(group_max(&s, 1), s.to_vec());
+    }
+
+    #[test]
+    fn top_k_orders_descending_with_stable_ties() {
+        let v = [0.5, 2.0, 2.0, -1.0, 3.0];
+        assert_eq!(top_k_indices(&v, 3), vec![4, 1, 2]);
+        assert_eq!(top_k_indices(&v, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&v, 99).len(), 5);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut xs = [1000.0, 1001.0, 999.0];
+        softmax(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(xs[1] > xs[0] && xs[0] > xs[2]);
+    }
+
+    #[test]
+    fn cosine_and_rel_err() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert!(cosine(&a, &b).abs() < 1e-6);
+        assert!((rel_err(&a, &a)).abs() < 1e-6);
+        assert!(rel_err(&b, &a) > 1.0);
+    }
+
+    #[test]
+    fn summary_and_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let s = summarize(&xs);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-9);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Infrastructure substrates: JSON, RNG, clocks, CLI parsing, logging,
+//! numeric helpers and a mini property-test framework. These replace the
+//! crates (`serde`, `rand`, `clap`, `criterion`, `proptest`) that the
+//! offline registry does not provide — see DESIGN.md §2.
+
+pub mod cli;
+pub mod clock;
+pub mod json;
+pub mod mathx;
+pub mod proptest;
+pub mod rng;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+/// `info!`-style logging macro; level 1.
+#[macro_export]
+macro_rules! log_info {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_enabled(1) {
+            eprintln!("[kvswap] {}", format!($($fmt)*));
+        }
+    };
+}
+
+/// Verbose diagnostics; level 2 (enable with --verbose).
+#[macro_export]
+macro_rules! log_debug {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[kvswap:debug] {}", format!($($fmt)*));
+        }
+    };
+}
+
+/// Pretty byte counts for reports.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0 MiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn log_level_gating() {
+        set_log_level(0);
+        assert!(!log_enabled(1));
+        set_log_level(2);
+        assert!(log_enabled(1) && log_enabled(2));
+        set_log_level(1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Mini property-testing framework (`proptest` is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over many seeded RNGs;
+//! on failure it retries with the same seed to print a reproducible
+//! counterexample seed. Used by the kvcache / coordinator / disk invariant
+//! tests (DESIGN.md §8).
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` random cases. The closure gets a deterministic
+/// per-case RNG and returns `Err(msg)` (or panics) on violation.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = seed_from_env();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}; \
+                 rerun with KVSWAP_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property panics instead of returning Err.
+pub fn check_panics<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    check(name, cases, |rng| {
+        prop(rng);
+        Ok(())
+    });
+}
+
+fn seed_from_env() -> u64 {
+    std::env::var("KVSWAP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Assert helper that formats a failure message for `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, |rng| {
+            n += 1;
+            let x = rng.below(10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn per_case_rng_is_deterministic() {
+        let mut seen_a = Vec::new();
+        check("collect", 5, |rng| {
+            seen_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check("collect", 5, |rng| {
+            seen_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

@@ -1,0 +1,108 @@
+//! Analytical memory models — reproduce the paper's shape-arithmetic
+//! exhibits (Fig. 1 KV footprint, Fig. 3a management memory of prior
+//! offloading schemes) without running the large models.
+
+use crate::config::ModelSpec;
+
+/// KV-cache bytes at f16 (the paper's W16A16 setting) for batch/context.
+pub fn kv_cache_f16_bytes(spec: &ModelSpec, batch: usize, context: usize) -> u64 {
+    // our ModelSpec arithmetic is f32; the paper's models store f16
+    spec.kv_cache_bytes(batch, context) / 2
+}
+
+/// Management-memory models of the offloading baselines (paper Fig. 3a,
+/// §2.4): what each scheme must keep *in memory* per sequence to decide
+/// and serve selective loads. All in bytes, f16 entries like the paper.
+pub mod mgmt {
+    use super::*;
+
+    /// InfiniGen keeps partial-weight projected K (ratio of the full K
+    /// cache, default partial weight ratio 0.5 -> ~half the K cache) plus
+    /// staging for selected entries.
+    pub fn infinigen(spec: &ModelSpec, batch: usize, context: usize, partial_ratio: f64) -> u64 {
+        let k_cache_f16 = spec.kv_cache_bytes(batch, context) / 2 / 2; // K only
+        (k_cache_f16 as f64 * partial_ratio) as u64
+    }
+
+    /// ShadowKV keeps a conservative-rank low-rank K on GPU plus chunk
+    /// landmarks and outliers; V goes off-memory. Rank per its paper:
+    /// r=160 of head_dim*... modeled as rank/head_dim fraction of K cache
+    /// plus 1/8 outliers.
+    pub fn shadowkv(spec: &ModelSpec, batch: usize, context: usize, rank: usize) -> u64 {
+        let hd = spec.kv_flat_dim();
+        let k_cache_f16 = spec.kv_cache_bytes(batch, context) / 2 / 2;
+        let lowrank = (k_cache_f16 as f64 * rank as f64 / hd as f64) as u64;
+        let outliers = k_cache_f16 / 8;
+        lowrank + outliers
+    }
+
+    /// KVSwap keeps only the compressed K cache (sigma compression) plus
+    /// fixed-size buffers (reuse + rolling + staging).
+    pub fn kvswap(
+        spec: &ModelSpec,
+        batch: usize,
+        context: usize,
+        sigma: f64,
+        reuse_slots: usize,
+        group: usize,
+        rb: usize,
+        mg: usize,
+    ) -> u64 {
+        let k_cache_f16 = spec.kv_cache_bytes(batch, context) / 2 / 2;
+        let klr = (k_cache_f16 as f64 / sigma) as u64;
+        let entry = spec.kv_bytes_per_token_layer() / 2; // f16 K+V one layer
+        let l = spec.n_layers as u64;
+        let fixed = batch as u64
+            * (reuse_slots as u64 * group as u64 * entry * l + rb as u64 * entry * l
+                + mg as u64 * entry);
+        klr + fixed
+    }
+
+    /// Full cache in memory (vLLM-like / Full-KV).
+    pub fn full(spec: &ModelSpec, batch: usize, context: usize) -> u64 {
+        kv_cache_f16_bytes(spec, batch, context)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_spec;
+
+    #[test]
+    fn fig1_qwen3_4b_numbers() {
+        let q = paper_spec("qwen3-4b");
+        // paper: 16K ctx, batch 4 -> ~9 GiB
+        let gib = kv_cache_f16_bytes(&q, 4, 16384) as f64 / (1u64 << 30) as f64;
+        assert!((8.0..10.0).contains(&gib), "{gib}");
+        // 32K ctx, batch 12 -> ~54 GiB
+        let gib2 = kv_cache_f16_bytes(&q, 12, 32768) as f64 / (1u64 << 30) as f64;
+        assert!((50.0..58.0).contains(&gib2), "{gib2}");
+    }
+
+    #[test]
+    fn fig3a_infinigen_shadowkv_are_heavy_kvswap_is_light() {
+        let l = paper_spec("llama3-8b");
+        let (b, s) = (8, 16384);
+        let ig = mgmt::infinigen(&l, b, s, 0.5);
+        let sk = mgmt::shadowkv(&l, b, s, 160);
+        // tuned KVSwap-t config at paper scale: sigma=32, C=24 groups
+        let kv = mgmt::kvswap(&l, b, s, 32.0, 24, 8, 16, 400);
+        let full = mgmt::full(&l, b, s);
+        // paper Fig. 3a: InfiniGen ~4 GiB, ShadowKV ~2.7 GiB at 16K, b=8
+        let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
+        assert!((3.0..5.5).contains(&gib(ig)), "infinigen {}", gib(ig));
+        assert!((1.8..3.8).contains(&gib(sk)), "shadowkv {}", gib(sk));
+        // KVSwap management memory is far below both and below full/13
+        assert!(kv < sk / 3, "kvswap {} vs shadowkv {}", gib(kv), gib(sk));
+        assert!(kv < full / 13, "kvswap {} vs full {}", gib(kv), gib(full));
+    }
+
+    #[test]
+    fn mgmt_memory_scales_linearly_with_context() {
+        let l = paper_spec("llama3-8b");
+        let a = mgmt::infinigen(&l, 8, 8192, 0.5);
+        let b = mgmt::infinigen(&l, 8, 16384, 0.5);
+        assert!((b as f64 / a as f64 - 2.0).abs() < 0.01);
+    }
+}

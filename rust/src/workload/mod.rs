@@ -1,0 +1,39 @@
+//! Workloads: request trace generation, synthetic KV materialization for
+//! long-context decode benches, needle planting for the NIAH quality
+//! harness, and the analytical memory models behind Fig. 1 / Fig. 3a.
+
+pub mod memory_model;
+pub mod needle;
+pub mod tracegen;
+
+use crate::util::rng::Rng;
+
+/// Materialize realistic-scale synthetic KV rows for decode-throughput
+/// benches (decode speed does not depend on KV *content*; quality benches
+/// use real prefill instead — DESIGN.md §2). Rows are N(0, 0.6) like
+/// post-RoPE K/V of the nano model.
+pub fn synthetic_kv_rows(n_tokens: usize, hd: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let k = (0..n_tokens * hd).map(|_| rng.normal_f32(0.6)).collect();
+    let v = (0..n_tokens * hd).map(|_| rng.normal_f32(0.6)).collect();
+    (k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_kv_deterministic_and_scaled() {
+        let (k1, v1) = synthetic_kv_rows(16, 8, 42);
+        let (k2, _) = synthetic_kv_rows(16, 8, 42);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 128);
+        let std = {
+            let mean = k1.iter().sum::<f32>() / k1.len() as f32;
+            (k1.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / k1.len() as f32).sqrt()
+        };
+        assert!((0.3..0.9).contains(&std), "std {std}");
+        assert_ne!(k1, v1);
+    }
+}

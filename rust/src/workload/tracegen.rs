@@ -1,0 +1,133 @@
+//! Request-trace generation for the serving benches and the TCP example:
+//! long-context requests with configurable context lengths, decode
+//! lengths, and Poisson-ish arrivals.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt context length (tokens already in the KV cache).
+    pub context: usize,
+    /// Tokens to generate.
+    pub decode: usize,
+    /// Arrival time offset in seconds from trace start.
+    pub arrival_s: f64,
+    /// Seed for the request's synthetic content.
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub context_min: usize,
+    pub context_max: usize,
+    pub decode_min: usize,
+    pub decode_max: usize,
+    /// Mean arrival rate (req/s); 0 = all arrive at t=0.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 8,
+            context_min: 512,
+            context_max: 2048,
+            decode_min: 32,
+            decode_max: 128,
+            rate: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0;
+    (0..cfg.n_requests)
+        .map(|i| {
+            if cfg.rate > 0.0 {
+                // exponential inter-arrival
+                t += -(1.0 - rng.f64()).ln() / cfg.rate;
+            }
+            Request {
+                id: i as u64,
+                context: if cfg.context_max > cfg.context_min {
+                    rng.range(cfg.context_min, cfg.context_max + 1)
+                } else {
+                    cfg.context_min
+                },
+                decode: if cfg.decode_max > cfg.decode_min {
+                    rng.range(cfg.decode_min, cfg.decode_max + 1)
+                } else {
+                    cfg.decode_min
+                },
+                arrival_s: t,
+                seed: cfg.seed.wrapping_add(i as u64 * 7919),
+            }
+        })
+        .collect()
+}
+
+/// Random token prompt for a request (vocabulary-bounded).
+pub fn prompt_tokens(req: &Request, vocab: usize) -> Vec<i32> {
+    let mut rng = Rng::new(req.seed);
+    (0..req.context).map(|_| rng.below(vocab) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_respects_bounds_and_is_deterministic() {
+        let cfg = TraceConfig {
+            n_requests: 20,
+            context_min: 100,
+            context_max: 200,
+            decode_min: 5,
+            decode_max: 10,
+            rate: 2.0,
+            seed: 3,
+        };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        let mut last_t = 0.0;
+        for r in &a {
+            assert!((100..=200).contains(&r.context));
+            assert!((5..=10).contains(&r.decode));
+            assert!(r.arrival_s >= last_t);
+            last_t = r.arrival_s;
+        }
+    }
+
+    #[test]
+    fn zero_rate_means_batch_arrival() {
+        let cfg = TraceConfig {
+            rate: 0.0,
+            ..Default::default()
+        };
+        for r in generate(&cfg) {
+            assert_eq!(r.arrival_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_in_vocab() {
+        let r = Request {
+            id: 0,
+            context: 50,
+            decode: 1,
+            arrival_s: 0.0,
+            seed: 9,
+        };
+        let toks = prompt_tokens(&r, 512);
+        assert_eq!(toks.len(), 50);
+        assert!(toks.iter().all(|&t| (0..512).contains(&t)));
+        assert_eq!(toks, prompt_tokens(&r, 512));
+    }
+}

@@ -1,0 +1,243 @@
+//! Integration: PJRT-executed HLO artifacts vs the pure-Rust host oracle.
+//!
+//! This is the repo's cross-layer correctness keystone: the same math must
+//! come out of (a) the Pallas-kernel-bearing HLO produced by the JAX
+//! compile path and (b) `runtime::host_ref`. Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use kvswap::runtime::{
+    default_artifacts_dir, HostModel, KvLayer, Manifest, ModelRuntime, PjrtRuntime, Tensor,
+    TensorI32,
+};
+use kvswap::util::mathx;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(PjrtRuntime::new(Manifest::load(dir).unwrap()).unwrap()))
+}
+
+fn host_model(rt: &Rc<PjrtRuntime>, preset: &str) -> HostModel {
+    let weights = rt.host_weights(preset).unwrap();
+    let spec = rt.manifest.presets[preset].spec.clone();
+    HostModel::new(spec, weights)
+}
+
+#[test]
+fn embed_and_logits_match_host_ref() {
+    let Some(rt) = runtime() else { return };
+    let mr = ModelRuntime::new(rt.clone(), "nano", 2).unwrap();
+    let host = host_model(&rt, "nano");
+    let tokens = [17i32, 401];
+    let x = mr.embed(&tokens).unwrap();
+    for (b, &tok) in tokens.iter().enumerate() {
+        let want = host.embed(tok);
+        assert!(
+            mathx::rel_err(x.row(&[b]), &want) < 1e-5,
+            "embed row {b} mismatch"
+        );
+    }
+    let (toks, tops) = mr.logits_argmax(x).unwrap();
+    for (b, &tok) in tokens.iter().enumerate() {
+        let (want_tok, want_top) = host.logits_argmax(&host.embed(tok));
+        assert_eq!(toks[b], want_tok);
+        assert!((tops[b] - want_top).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn decode_block_matches_host_ref_over_random_cache() {
+    let Some(rt) = runtime() else { return };
+    let batch = 2;
+    let mr = ModelRuntime::new(rt.clone(), "nano", batch).unwrap();
+    let host = host_model(&rt, "nano");
+    let spec = host.spec.clone();
+    let p = mr.p_sel;
+    let (hkv, d) = (spec.n_kv_heads, spec.head_dim);
+    let hd = spec.kv_flat_dim();
+
+    let mut rng = kvswap::util::rng::Rng::new(7);
+    // random activations + random KV rows; last 20 slots masked out
+    let n_valid = p - 20;
+    let x = Tensor::from_vec(
+        &[batch, spec.d_model],
+        (0..batch * spec.d_model).map(|_| rng.normal_f32(1.0)).collect(),
+    );
+    // host layout: token-major rows [Hkv*d]; artifact layout: [b,Hkv,P,d]
+    let mut k_rows = vec![vec![0.0f32; hd]; batch * p];
+    let mut v_rows = vec![vec![0.0f32; hd]; batch * p];
+    for r in k_rows.iter_mut().chain(v_rows.iter_mut()) {
+        for v in r.iter_mut() {
+            *v = rng.normal_f32(0.5);
+        }
+    }
+    let mut k_sel = Tensor::zeros(&[batch, hkv, p, d]);
+    let mut v_sel = Tensor::zeros(&[batch, hkv, p, d]);
+    for b in 0..batch {
+        for g in 0..hkv {
+            for s in 0..p {
+                for dd in 0..d {
+                    *k_sel.at_mut(&[b, g, s, dd]) = k_rows[b * p + s][g * d + dd];
+                    *v_sel.at_mut(&[b, g, s, dd]) = v_rows[b * p + s][g * d + dd];
+                }
+            }
+        }
+    }
+    let mut mask = Tensor::zeros(&[batch, p]);
+    for b in 0..batch {
+        for s in n_valid..p {
+            *mask.at_mut(&[b, s]) = -1e9;
+        }
+    }
+    let pos = vec![100i32, 37];
+
+    for layer in [0, spec.n_layers - 1] {
+        let (x_out, k_new, v_new) = mr
+            .decode_block(
+                "decode_p272",
+                layer,
+                x.clone(),
+                k_sel.clone(),
+                v_sel.clone(),
+                mask.clone(),
+                &pos,
+            )
+            .unwrap();
+        for b in 0..batch {
+            let krefs: Vec<&[f32]> = (0..n_valid).map(|s| k_rows[b * p + s].as_slice()).collect();
+            let vrefs: Vec<&[f32]> = (0..n_valid).map(|s| v_rows[b * p + s].as_slice()).collect();
+            let (want_x, want_k, want_v) =
+                host.block(layer, x.row(&[b]), &krefs, &vrefs, None, pos[b]);
+            assert!(
+                mathx::rel_err(x_out.row(&[b]), &want_x) < 1e-3,
+                "layer {layer} b {b}: x rel err {}",
+                mathx::rel_err(x_out.row(&[b]), &want_x)
+            );
+            // artifact k_new is [Hkv, d]; host k_new is [Hkv*d] same order
+            assert!(mathx::rel_err(k_new.row(&[b]), &want_k) < 1e-3);
+            assert!(mathx::rel_err(v_new.row(&[b]), &want_v) < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn predict_scores_match_host_ref() {
+    let Some(rt) = runtime() else { return };
+    let batch = 2;
+    let mr = ModelRuntime::new(rt.clone(), "nano", batch).unwrap();
+    let host = host_model(&rt, "nano");
+    let spec = host.spec.clone();
+    let ncap = 1024;
+    let rank = 16;
+    let mut rng = kvswap::util::rng::Rng::new(8);
+    let lens = [600i32, 37];
+    let pos = [700i32, 90];
+    let x = Tensor::from_vec(
+        &[batch, spec.d_model],
+        (0..batch * spec.d_model).map(|_| rng.normal_f32(1.0)).collect(),
+    );
+    let k_lr = Tensor::from_vec(
+        &[batch, ncap, rank],
+        (0..batch * ncap * rank).map(|_| rng.normal_f32(1.0)).collect(),
+    );
+    let layer = 2;
+    let scores = mr
+        .predict_scores(layer, ncap, rank, x.clone(), k_lr.clone(), &lens, &pos)
+        .unwrap();
+    let adapter = &rt.host_weights("nano").unwrap()[&format!("layer{layer}.A{rank}")].clone();
+    for b in 0..batch {
+        let rows: Vec<&[f32]> = (0..lens[b] as usize).map(|n| k_lr.row(&[b, n])).collect();
+        let want = host.predict_scores(layer, x.row(&[b]), adapter, &rows, pos[b]);
+        let got = &scores.row(&[b])[..lens[b] as usize];
+        assert!(
+            mathx::rel_err(got, &want) < 1e-3,
+            "b {b}: rel err {}",
+            mathx::rel_err(got, &want)
+        );
+        // masked tail is NEG_INF
+        for s in lens[b] as usize..ncap {
+            assert!(scores.at(&[b, s]) <= -1e8);
+        }
+    }
+}
+
+#[test]
+fn prefill_blocks_match_host_ref_prefill() {
+    let Some(rt) = runtime() else { return };
+    let batch = 1;
+    let mr = ModelRuntime::new(rt.clone(), "nano", batch).unwrap();
+    let host = host_model(&rt, "nano");
+    let spec = host.spec.clone();
+    let info = &rt.manifest.presets["nano"];
+    let (chunk, ncap) = (info.prefill_chunk, info.prefill_ncap);
+    let (hkv, d) = (spec.n_kv_heads, spec.head_dim);
+
+    let mut rng = kvswap::util::rng::Rng::new(9);
+    let s_len = 2 * chunk; // two chunks
+    let tokens: Vec<i32> = (0..s_len).map(|_| rng.below(spec.vocab) as i32).collect();
+    let (want_xs, want_caches) = host.prefill(&tokens);
+
+    // chunked prefill through artifacts, one KV cache tensor per layer
+    let mut k_caches: Vec<Tensor> =
+        (0..spec.n_layers).map(|_| Tensor::zeros(&[batch, hkv, ncap, d])).collect();
+    let mut v_caches: Vec<Tensor> =
+        (0..spec.n_layers).map(|_| Tensor::zeros(&[batch, hkv, ncap, d])).collect();
+    let mut last_x_row = vec![0.0f32; spec.d_model];
+    for c0 in (0..s_len).step_by(chunk) {
+        let toks = TensorI32::from_vec(&[batch, chunk], tokens[c0..c0 + chunk].to_vec());
+        let mut x = mr.embed_chunk(&toks, chunk).unwrap();
+        let start = vec![c0 as i32];
+        for layer in 0..spec.n_layers {
+            let (x1, k_chunk, v_chunk) = mr
+                .prefill_block(
+                    layer,
+                    chunk,
+                    ncap,
+                    x,
+                    k_caches[layer].clone(),
+                    v_caches[layer].clone(),
+                    &start,
+                )
+                .unwrap();
+            x = x1;
+            for g in 0..hkv {
+                for t in 0..chunk {
+                    for dd in 0..d {
+                        *k_caches[layer].at_mut(&[0, g, c0 + t, dd]) = k_chunk.at(&[0, g, t, dd]);
+                        *v_caches[layer].at_mut(&[0, g, c0 + t, dd]) = v_chunk.at(&[0, g, t, dd]);
+                    }
+                }
+            }
+        }
+        last_x_row.copy_from_slice(x.row(&[0, chunk - 1]));
+    }
+
+    // final hidden state of the last token matches host prefill
+    let want_last = want_xs.last().unwrap();
+    assert!(
+        mathx::rel_err(&last_x_row, want_last) < 5e-3,
+        "final x rel err {}",
+        mathx::rel_err(&last_x_row, want_last)
+    );
+    // per-layer KV caches match (host rows are [Hkv*d] token-major)
+    for layer in 0..spec.n_layers {
+        for t in 0..s_len {
+            let want_k = want_caches[layer].k_row(t);
+            let mut got = vec![0.0f32; spec.kv_flat_dim()];
+            for g in 0..hkv {
+                for dd in 0..d {
+                    got[g * d + dd] = k_caches[layer].at(&[0, g, t, dd]);
+                }
+            }
+            assert!(
+                mathx::rel_err(&got, want_k) < 5e-3,
+                "layer {layer} tok {t}: k rel err {}",
+                mathx::rel_err(&got, want_k)
+            );
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Integration: the full decode engine across policies.
+//!
+//! Checks that (a) every policy decodes end-to-end through the PJRT
+//! artifacts, (b) KVSwap's selected-attention activations track the
+//! Full-KV oracle closely, (c) the I/O orderings the paper claims hold
+//! (grouped ≪ per-token bytes-on-wire; reuse reduces loads).
+
+use std::rc::Rc;
+
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::{Engine, EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
+use kvswap::util::mathx;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(PjrtRuntime::new(Manifest::load(dir).unwrap()).unwrap()))
+}
+
+fn cfg(policy: Policy, batch: usize, context: usize) -> EngineConfig {
+    EngineConfig {
+        preset: "nano".into(),
+        batch,
+        policy,
+        kv: KvSwapConfig::default(),
+        disk: DiskProfile::nvme(),
+        real_time: false,
+        time_scale: 1.0,
+        max_context: context.max(512),
+        seed: 7,
+    }
+}
+
+#[test]
+fn kvswap_decodes_and_tracks_full_kv_oracle() {
+    let Some(rt) = runtime() else { return };
+    let steps = 12;
+    let context = 512; // > MG + rb so selection is non-trivial
+
+    // identical real prefills through the AOT artifacts (the SVD
+    // adapters were calibrated on the real K distribution, so synthetic
+    // isotropic KV would defeat the predictor by construction)
+    let prompts: Vec<Vec<i32>> = (0..2)
+        .map(|i| {
+            let mut rng = kvswap::util::rng::Rng::new(100 + i);
+            (0..context).map(|_| rng.below(512) as i32).collect()
+        })
+        .collect();
+
+    let mut oracle = Engine::new(rt.clone(), cfg(Policy::FullMemory, 2, 2048)).unwrap();
+    let of = oracle.prefill(&prompts).unwrap();
+    let (ostats, oxs, otoks) = oracle.decode(steps, true, None).unwrap();
+    assert_eq!(ostats.steps as usize, steps);
+
+    let mut kv = Engine::new(rt.clone(), cfg(Policy::KvSwap, 2, 2048)).unwrap();
+    let kf = kv.prefill(&prompts).unwrap();
+    assert_eq!(of, kf, "prefill first tokens must agree");
+    // teacher-forced on the oracle trajectory: per-step activation
+    // fidelity then measures pure attention-approximation error
+    let (kstats, kxs, _) = kv.decode(steps, true, Some(&otoks)).unwrap();
+    assert_eq!(kstats.steps as usize, steps);
+    assert!(kstats.tokens == 2 * steps as u64);
+
+    // activations track the oracle (selected attention ≈ full attention)
+    let mut cos_sum = 0.0;
+    let mut n = 0;
+    for (ox, kx) in oxs.iter().zip(&kxs) {
+        for b in 0..2 {
+            cos_sum += mathx::cosine(ox.row(&[b]), kx.row(&[b])) as f64;
+            n += 1;
+        }
+    }
+    let mean_cos = cos_sum / n as f64;
+    assert!(
+        mean_cos > 0.7,
+        "kvswap diverged from oracle: mean cosine {mean_cos}"
+    );
+
+    // kvswap moved far fewer bytes than the full cache per step
+    let full_bytes_per_step = kv.spec().kv_cache_bytes(2, context);
+    assert!(kstats.bytes_loaded < full_bytes_per_step * steps as u64 / 2);
+    // reuse is active
+    assert!(kstats.reuse_rate.unwrap_or(0.0) > 0.3, "reuse {:?}", kstats.reuse_rate);
+}
+
+#[test]
+fn every_policy_decodes() {
+    let Some(rt) = runtime() else { return };
+    for policy in [
+        Policy::KvSwap,
+        Policy::FlexGen,
+        Policy::InfiniGen {
+            head_agg: false,
+            reuse: false,
+        },
+        Policy::InfiniGen {
+            head_agg: true,
+            reuse: false,
+        },
+        Policy::InfiniGen {
+            head_agg: true,
+            reuse: true,
+        },
+        Policy::Loki,
+        Policy::ShadowKv { chunk: 8, rank: 32 },
+        Policy::FullMemory,
+    ] {
+        let name = policy.name();
+        let mut e = Engine::new(rt.clone(), cfg(policy, 1, 1024)).unwrap();
+        e.ingest_synthetic(&[320]).unwrap();
+        let (stats, _, _) = e.decode(4, false, None).unwrap_or_else(|err| panic!("{name}: {err}"));
+        assert_eq!(stats.steps, 4, "{name}");
+        assert!(stats.seconds > 0.0, "{name}");
+        assert!(stats.tokens_per_sec() > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn grouped_loads_move_fewer_bytes_than_token_granular() {
+    let Some(rt) = runtime() else { return };
+    let steps = 6;
+    let context = 512;
+
+    let run = |policy: Policy| {
+        let mut e = Engine::new(rt.clone(), cfg(policy, 1, 1024)).unwrap();
+        e.ingest_synthetic(&[context]).unwrap();
+        let (stats, _, _) = e.decode(steps, false, None).unwrap();
+        let snap = e.disk.stats().snapshot();
+        (stats, snap)
+    };
+
+    let (_kv_stats, kv_snap) = run(Policy::KvSwap);
+    let (_ig_stats, ig_snap) = run(Policy::InfiniGen {
+        head_agg: true,
+        reuse: false,
+    });
+    // same entry budget, but per-token access amplifies physical reads
+    assert!(
+        ig_snap.physical_read_bytes > kv_snap.physical_read_bytes,
+        "infinigen* {} vs kvswap {}",
+        ig_snap.physical_read_bytes,
+        kv_snap.physical_read_bytes
+    );
+    // and needs many more read ops
+    assert!(ig_snap.read_ops > kv_snap.read_ops * 2);
+}
+
+#[test]
+fn reuse_buffer_cuts_disk_traffic() {
+    let Some(rt) = runtime() else { return };
+    let context = 512;
+    let steps = 8;
+
+    let mut with = Engine::new(rt.clone(), cfg(Policy::KvSwap, 1, 1024)).unwrap();
+    with.ingest_synthetic(&[context]).unwrap();
+    let (wstats, _, _) = with.decode(steps, false, None).unwrap();
+
+    let mut cfg_no = cfg(Policy::KvSwap, 1, 1024);
+    cfg_no.kv.use_reuse = false;
+    let mut without = Engine::new(rt.clone(), cfg_no).unwrap();
+    without.ingest_synthetic(&[context]).unwrap();
+    let (nstats, _, _) = without.decode(steps, false, None).unwrap();
+
+    assert!(
+        wstats.bytes_loaded * 2 < nstats.bytes_loaded,
+        "reuse {} vs no-reuse {}",
+        wstats.bytes_loaded,
+        nstats.bytes_loaded
+    );
+    assert!(wstats.reuse_rate.is_some());
+    assert!(nstats.reuse_rate.is_none());
+}
+
+#[test]
+fn flexgen_loads_everything_every_step() {
+    let Some(rt) = runtime() else { return };
+    let context = 512;
+    let steps = 3;
+    let mut e = Engine::new(rt.clone(), cfg(Policy::FlexGen, 1, 1024)).unwrap();
+    e.ingest_synthetic(&[context]).unwrap();
+    let (stats, _, _) = e.decode(steps, false, None).unwrap();
+    // every step reads ~the whole flushed cache for every layer
+    let spec = e.spec().clone();
+    let per_step_min = spec.kv_cache_bytes(1, context - 64); // allow RB slack
+    assert!(
+        stats.bytes_loaded >= per_step_min * steps as u64,
+        "flexgen bytes {} < {}",
+        stats.bytes_loaded,
+        per_step_min * steps as u64
+    );
+}
+
+#[test]
+fn emmc_is_slower_than_nvme_for_kvswap() {
+    let Some(rt) = runtime() else { return };
+    let context = 512;
+    let steps = 6;
+    let run = |disk: DiskProfile| {
+        let mut c = cfg(Policy::KvSwap, 1, 1024);
+        c.disk = disk;
+        let mut e = Engine::new(rt.clone(), c).unwrap();
+        e.ingest_synthetic(&[context]).unwrap();
+        let (stats, _, _) = e.decode(steps, false, None).unwrap();
+        let busy = e.disk.stats().snapshot().read_busy;
+        (stats.tokens_per_sec(), busy)
+    };
+    let (nvme_tps, nvme_busy) = run(DiskProfile::nvme());
+    let (emmc_tps, emmc_busy) = run(DiskProfile::emmc());
+    // the modeled device time is strictly ordered; throughput only
+    // within a noise margin (at this size both disks hide under compute,
+    // especially in debug builds)
+    assert!(
+        emmc_busy > nvme_busy,
+        "emmc busy {emmc_busy:?} should exceed nvme {nvme_busy:?}"
+    );
+    assert!(
+        nvme_tps >= emmc_tps * 0.8,
+        "nvme {nvme_tps} well below emmc {emmc_tps}"
+    );
+}

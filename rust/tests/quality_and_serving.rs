@@ -1,0 +1,150 @@
+//! Integration: quality harness orderings + the router/batcher serving
+//! path end-to-end (in-process, no TCP).
+
+use std::rc::Rc;
+
+use kvswap::baselines::{configure, Budget};
+use kvswap::config::KvSwapConfig;
+use kvswap::coordinator::batcher::BatcherConfig;
+use kvswap::coordinator::router::Router;
+use kvswap::coordinator::{EngineConfig, Policy};
+use kvswap::disk::DiskProfile;
+use kvswap::quality::{evaluate_policy, niah_cell};
+use kvswap::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
+use kvswap::workload::tracegen::Request;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Rc::new(PjrtRuntime::new(Manifest::load(dir).unwrap()).unwrap()))
+}
+
+fn cfg(policy: Policy, kv: KvSwapConfig) -> EngineConfig {
+    EngineConfig {
+        preset: "nano".into(),
+        batch: 1,
+        policy,
+        kv,
+        disk: DiskProfile::nvme(),
+        real_time: false,
+        time_scale: 1.0,
+        max_context: 2048,
+        seed: 0,
+    }
+}
+
+#[test]
+fn kvswap_quality_beats_tight_baselines() {
+    let Some(rt) = runtime() else { return };
+    let context = 1792;
+    let steps = 4;
+    let fid = |policy: &Policy, budget: Budget| {
+        let (p, kv) = configure(policy, budget, 4);
+        evaluate_policy(rt.clone(), cfg(p, kv), context, steps, 77)
+            .unwrap()
+            .fidelity
+    };
+    let kvswap_t = fid(&Policy::KvSwap, Budget::Tight);
+    let loki_t = fid(&Policy::Loki, Budget::Tight);
+    let infinigen = fid(
+        &Policy::InfiniGen {
+            head_agg: false,
+            reuse: false,
+        },
+        Budget::Tight,
+    );
+    eprintln!("fidelity: kvswap-t {kvswap_t:.3} loki-t {loki_t:.3} infinigen-t {infinigen:.3}");
+    // paper Tab. 2 ordering under the tight budget. KNOWN DEVIATION
+    // (EXPERIMENTS.md): our Loki variant shares KVSwap's SVD predictor
+    // (the real Loki's weaker approximation is what collapses in the
+    // paper), so its *quality* ties KVSwap here — its losses show up in
+    // throughput/IO instead. Assert statistical parity, not dominance.
+    assert!(
+        kvswap_t >= loki_t - 0.02,
+        "kvswap-t {kvswap_t:.3} well below loki-t {loki_t:.3}"
+    );
+    assert!(
+        kvswap_t > infinigen,
+        "kvswap-t {kvswap_t:.3} <= infinigen {infinigen:.3}"
+    );
+    assert!(kvswap_t > 0.5, "kvswap-t unusable: {kvswap_t:.3}");
+}
+
+#[test]
+fn niah_kvswap_retrieves_needle() {
+    let Some(rt) = runtime() else { return };
+    let (p, kv) = configure(&Policy::KvSwap, Budget::Relaxed, 4);
+    let score = niah_cell(rt.clone(), cfg(p, kv), 512, 0.4, 5, 10.0).unwrap();
+    assert!(score > 0.8, "kvswap missed the needle: {score:.3}");
+
+    // a needle-blind strawman: FlexGen truncated? use Loki-t which tends
+    // to lose needles at depth on tight budgets — allow it to pass but
+    // never beat kvswap by a margin
+    let (p2, kv2) = configure(&Policy::Loki, Budget::Tight, 4);
+    let s2 = niah_cell(rt.clone(), cfg(p2, kv2), 512, 0.4, 5, 10.0).unwrap();
+    assert!(score >= s2 - 0.05, "kvswap {score:.3} vs loki-t {s2:.3}");
+}
+
+#[test]
+fn router_serves_a_trace_in_process() {
+    let Some(_) = runtime() else { return };
+    let engine_cfg = EngineConfig {
+        preset: "nano".into(),
+        batch: 1,
+        policy: Policy::KvSwap,
+        kv: KvSwapConfig::default(),
+        disk: DiskProfile::nvme(),
+        real_time: false,
+        time_scale: 1.0,
+        max_context: 1024,
+        seed: 0,
+    };
+    let batcher_cfg = BatcherConfig {
+        supported: vec![1, 2],
+        linger_s: 0.01,
+        max_context: 1024,
+    };
+    let router = Router::spawn(default_artifacts_dir(), engine_cfg, batcher_cfg);
+    let n = 5;
+    for i in 0..n {
+        router.submit(Request {
+            id: i,
+            context: 256 + (i as usize % 2) * 128,
+            decode: 4 + i as usize,
+            arrival_s: 0.0,
+            seed: i,
+        });
+    }
+    router.flush();
+    let mut got = Vec::new();
+    for _ in 0..n {
+        let c = router
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("completion");
+        assert_eq!(c.tokens.len(), 4 + c.id as usize);
+        assert!(c.latency_ms >= 0.0);
+        got.push(c.id);
+    }
+    got.sort();
+    assert_eq!(got, (0..n).collect::<Vec<_>>());
+    router.stop().unwrap();
+}
+
+#[test]
+fn shadowkv_reconstruction_stays_consistent_across_ranks() {
+    // KNOWN DEVIATION (EXPERIMENTS.md): on trained models ShadowKV's
+    // tight-budget rank squeeze collapses quality (paper Tab. 2,
+    // -61.9% RULER); our synthetic K spectra put *noise* in the tail
+    // dims, so the low-rank reconstruction acts as a denoiser and
+    // ShadowKV-t stays usable. We assert the mechanism runs and both
+    // ranks produce coherent output, and document the deviation.
+    let Some(rt) = runtime() else { return };
+    let (p16, kv16) = configure(&Policy::ShadowKv { chunk: 8, rank: 32 }, Budget::Relaxed, 4);
+    let q16 = evaluate_policy(rt.clone(), cfg(p16, kv16), 768, 5, 55).unwrap();
+    let (p4, kv4) = configure(&Policy::ShadowKv { chunk: 8, rank: 32 }, Budget::Tight, 4);
+    let q4 = evaluate_policy(rt.clone(), cfg(p4, kv4), 768, 5, 55).unwrap();
+    assert!(q16.fidelity > 0.85, "shadowkv r16 broken: {:.3}", q16.fidelity);
+    assert!(q4.fidelity > 0.85, "shadowkv r4 broken: {:.3}", q4.fidelity);
+}
