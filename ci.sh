@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Repo CI gate: formatting, lints, and the full test suite.
+# Integration tests that need the AOT artifacts self-skip when
+# `make artifacts` has not been run.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+cargo test -q

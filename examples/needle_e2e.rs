@@ -41,17 +41,15 @@ fn main() -> anyhow::Result<()> {
             for (di, _) in depth_positions(context, depths).iter().enumerate() {
                 let frac = di as f64 / (depths.saturating_sub(1).max(1)) as f64;
                 let (p, kv) = configure(policy, *budget, 4);
-                let cfg = EngineConfig {
-                    preset: "nano".into(),
-                    batch: 1,
-                    policy: p,
-                    kv,
-                    disk: DiskProfile::nvme(),
-                    real_time: false,
-                    time_scale: 1.0,
-                    max_context: context.max(2048),
-                    seed: 5,
-                };
+                let cfg = EngineConfig::builder()
+                    .preset("nano")
+                    .batch(1)
+                    .policy(p)
+                    .kv(kv)
+                    .disk(DiskProfile::nvme())
+                    .max_context(context.max(2048))
+                    .seed(5)
+                    .build()?;
                 let score =
                     quality::niah_cell(Rc::clone(&rt), cfg, context, frac, 11, strength)?;
                 table.row(vec![

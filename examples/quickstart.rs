@@ -25,17 +25,15 @@ fn main() -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 32);
 
     let rt = Rc::new(PjrtRuntime::new(Manifest::load(default_artifacts_dir())?)?);
-    let cfg = EngineConfig {
-        preset: "nano".into(),
-        batch,
-        policy: Policy::KvSwap,
-        kv: KvSwapConfig::default(),
-        disk: disk.clone(),
-        real_time: false,
-        time_scale: 1.0,
-        max_context: context.max(2048),
-        seed: 1,
-    };
+    let cfg = EngineConfig::builder()
+        .preset("nano")
+        .batch(batch)
+        .policy(Policy::KvSwap)
+        .kv(KvSwapConfig::default())
+        .disk(disk.clone())
+        .max_context(context.max(2048))
+        .seed(1)
+        .build()?;
     println!(
         "kvswap quickstart: preset=nano batch={batch} context={context} disk={}",
         disk.name

@@ -27,17 +27,15 @@ fn main() -> anyhow::Result<()> {
     let (policy, kv) = configure(&policy, Budget::Relaxed, 4);
     let addr = args.str_or("addr", "127.0.0.1:7471");
 
-    let engine_cfg = EngineConfig {
-        preset: "nano".into(),
-        batch: 1, // router resizes per wave
-        policy,
-        kv,
-        disk,
-        real_time: false,
-        time_scale: 1.0,
-        max_context: 2048,
-        seed: 3,
-    };
+    let engine_cfg = EngineConfig::builder()
+        .preset("nano")
+        .batch(1) // router resizes per wave
+        .policy(policy)
+        .kv(kv)
+        .disk(disk)
+        .max_context(2048)
+        .seed(3)
+        .build()?;
     let batcher_cfg = BatcherConfig {
         supported: vec![1, 2, 4],
         linger_s: 0.05,

@@ -30,17 +30,14 @@ fn main() -> anyhow::Result<()> {
         for (b, s) in [(1usize, 2048usize), (4, 2048)] {
             let mut e = Engine::new(
                 rt.clone(),
-                EngineConfig {
-                    preset: "nano".into(),
-                    batch: b,
-                    policy: Policy::KvSwap,
-                    kv: KvSwapConfig::default(),
-                    disk: disk.clone(),
-                    real_time: false,
-                    time_scale: 1.0,
-                    max_context: s,
-                    seed: 0,
-                },
+                EngineConfig::builder()
+                    .preset("nano")
+                    .batch(b)
+                    .policy(Policy::KvSwap)
+                    .kv(KvSwapConfig::default())
+                    .disk(disk.clone())
+                    .max_context(s)
+                    .build()?,
             )?;
             e.ingest_synthetic(&vec![s - 64; b])?;
             let (stats, _, _) = e.decode(6, false, None)?;
@@ -79,17 +76,14 @@ fn main() -> anyhow::Result<()> {
         let kv = sol.to_kvswap_config(&KvSwapConfig::default());
         let mut e = Engine::new(
             rt.clone(),
-            EngineConfig {
-                preset: "nano".into(),
-                batch: 4,
-                policy: Policy::KvSwap,
-                kv,
-                disk: disk.clone(),
-                real_time: false,
-                time_scale: 1.0,
-                max_context: 2048,
-                seed: 0,
-            },
+            EngineConfig::builder()
+                .preset("nano")
+                .batch(4)
+                .policy(Policy::KvSwap)
+                .kv(kv)
+                .disk(disk.clone())
+                .max_context(2048)
+                .build()?,
         )?;
         e.ingest_synthetic(&vec![2048 - 64; 4])?;
         let (stats, _, _) = e.decode(10, false, None)?;

@@ -9,7 +9,7 @@ use std::rc::Rc;
 use kvswap::baselines::{configure, Budget};
 use kvswap::bench::{banner, engine_cfg, run_throughput, runtime};
 use kvswap::config::KvSwapConfig;
-use kvswap::coordinator::{EngineConfig, Policy};
+use kvswap::coordinator::Policy;
 use kvswap::disk::DiskProfile;
 use kvswap::metrics::Table;
 use kvswap::quality::evaluate_policy;
@@ -67,10 +67,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg = engine_cfg("nano", max_b, p.clone(), kv.clone(), disk.clone(), context);
                 let (stats, _) = run_throughput(rt.clone(), cfg, context - 64, 1, steps)?;
                 // quality at b=1 (budget-independent fidelity estimate)
-                let qcfg = EngineConfig {
-                    batch: 1,
-                    ..engine_cfg("nano", 1, p.clone(), kv, disk.clone(), context)
-                };
+                let qcfg = engine_cfg("nano", 1, p.clone(), kv, disk.clone(), context);
                 let q = evaluate_policy(Rc::clone(&rt), qcfg, 512, 4, 3)?;
                 t.row(vec![
                     p.name(),

@@ -5,6 +5,7 @@
 
 use kvswap::baselines::{configure, Budget};
 use kvswap::bench::{banner, engine_cfg, run_throughput, runtime};
+use kvswap::config::PrefetchConfig;
 use kvswap::coordinator::Policy;
 use kvswap::disk::DiskProfile;
 use kvswap::metrics::{Phase, Table};
@@ -41,6 +42,7 @@ fn main() -> anyhow::Result<()> {
             true,
         ),
         ("kvswap wo/reu", Policy::KvSwap, false),
+        ("kvswap sync-io", Policy::KvSwap, true),
         ("kvswap", Policy::KvSwap, true),
     ];
     let mut t = Table::new(&["method", "io_wait", "attn", "predict", "gather", "reuse_mgmt", "total/block"]);
@@ -49,7 +51,12 @@ fn main() -> anyhow::Result<()> {
         if !reuse && matches!(p, Policy::KvSwap) {
             kv.use_reuse = false;
         }
-        let cfg = engine_cfg("nano", batch, p, kv, DiskProfile::nvme(), context);
+        let mut cfg = engine_cfg("nano", batch, p, kv, DiskProfile::nvme(), context);
+        if name == "kvswap sync-io" {
+            // ablation: same policy, no prefetch pipeline — every device
+            // read charges the decode loop in full
+            cfg.prefetch = PrefetchConfig::synchronous();
+        }
         let (stats, _) = run_throughput(rt.clone(), cfg, context - 64, 1, steps)?;
         let per_block = |ph: Phase| stats.breakdown.per_step_ms(ph) / layers;
         let total = [

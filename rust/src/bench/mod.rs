@@ -28,17 +28,15 @@ pub fn engine_cfg(
     disk: DiskProfile,
     max_context: usize,
 ) -> EngineConfig {
-    EngineConfig {
-        preset: preset.to_string(),
-        batch,
-        policy,
-        kv,
-        disk,
-        real_time: false,
-        time_scale: 1.0,
-        max_context,
-        seed: 0,
-    }
+    EngineConfig::builder()
+        .preset(preset)
+        .batch(batch)
+        .policy(policy)
+        .kv(kv)
+        .disk(disk)
+        .max_context(max_context)
+        .build()
+        .expect("valid bench config")
 }
 
 /// Run a decode-throughput measurement: synthetic contexts, `steps`

@@ -6,16 +6,22 @@
 //! ```text
 //! x0 = embed(tok)                 (loads for layer 0 were issued at the
 //! for layer l in 0..L:             end of the previous step)
-//!     recv loads for layer l  ───── I/O thread (SimDisk, paced/modeled)
+//!     recv staged bytes, layer l ── prefetch pool (coalesced batch reads)
 //!     predict layer l+1 scores from x_l (HLO predict artifact, Eq. 1)
-//!     select top-M groups, diff vs reuse buffer, send misses to I/O ──►
+//!     select top-M groups, diff vs reuse buffer, submit preload plan ──►
 //!     gather: mapping table -> contiguous k_sel/v_sel/mask
 //!     x_{l+1} = decode_block(l, x_l, gathered KV)   (Pallas kernel)
 //! tok' = logits_argmax(x_L); append per-layer new KV (rolling buffer,
 //! group flush -> disk + K_lr); predict layer 0 for the next step.
 //! ```
 //!
-//! Timing: in **real** mode the I/O thread genuinely sleeps (SimDisk
+//! The hot path never calls `Backend::read_at` synchronously: plans are
+//! submitted to the [`Prefetcher`] ahead of compute and the gather only
+//! waits on already-staged buffers, so `Phase::IoWait` measures the
+//! *residual* stall, not full read latency. The prefetch workers touch
+//! only `Backend` + staging memory — the `Rc<PjrtRuntime>` stays here.
+//!
+//! Timing: in **real** mode the prefetch workers genuinely sleep (SimDisk
 //! pacing) and the pipeline overlap is physical. In **virtual** mode the
 //! engine folds measured compute and modeled I/O into a virtual clock:
 //! per layer, `stall = max(0, io_time - compute_since_issue)` — the
@@ -23,13 +29,14 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::policy::Policy;
-use crate::config::{KvSwapConfig, ModelSpec};
-use crate::disk::{DiskProfile, SimDisk};
+use crate::config::{KvSwapConfig, ModelSpec, PrefetchConfig};
+use crate::disk::{
+    DiskProfile, PlannedExtent, Prefetcher, PreloadPlan, SimDisk, StorageBackend,
+};
 use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
 use crate::metrics::{Breakdown, DecodeStats, Phase};
 use crate::predictor::{self, OverlapTracker};
@@ -48,6 +55,10 @@ pub struct EngineConfig {
     pub policy: Policy,
     pub kv: KvSwapConfig,
     pub disk: DiskProfile,
+    /// Where the offloaded KV bytes physically live.
+    pub storage: StorageBackend,
+    /// Prefetch-pipeline shape (workers / queue depth / coalescing gap).
+    pub prefetch: PrefetchConfig,
     /// true: SimDisk sleeps (scaled); false: virtual-clock accounting.
     pub real_time: bool,
     pub time_scale: f64,
@@ -64,6 +75,8 @@ impl Default for EngineConfig {
             policy: Policy::KvSwap,
             kv: KvSwapConfig::default(),
             disk: DiskProfile::nvme(),
+            storage: StorageBackend::Mem,
+            prefetch: PrefetchConfig::default(),
             real_time: false,
             time_scale: 1.0,
             max_context: 2048,
@@ -72,26 +85,108 @@ impl Default for EngineConfig {
     }
 }
 
-/// One disk extent to load, tagged with the group/token id it serves.
-#[derive(Debug, Clone)]
-struct Extent {
-    tag: u32,
-    offset: u64,
-    len: usize,
+impl EngineConfig {
+    /// Validating construction — the supported way to build a config
+    /// (struct literals remain possible for tests via `Default`).
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder {
+            cfg: EngineConfig::default(),
+        }
+    }
 }
 
-enum IoReq {
-    Loads {
-        layer: usize,
-        per_seq: Vec<(usize, Vec<Extent>)>,
-    },
-    Stop,
+/// Chainable, validating builder for [`EngineConfig`]. `build()` rejects
+/// shapes the engine cannot run (zero group size, zero queue depth, an
+/// n-cap / attention width too small for the selection it must hold).
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
 }
 
-struct IoResp {
-    layer: usize,
-    per_seq: Vec<(usize, Vec<(u32, Vec<u8>)>)>,
-    io_time: Duration,
+impl EngineConfigBuilder {
+    pub fn preset(mut self, preset: impl Into<String>) -> Self {
+        self.cfg.preset = preset.into();
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.cfg.batch = batch;
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn kv(mut self, kv: KvSwapConfig) -> Self {
+        self.cfg.kv = kv;
+        self
+    }
+
+    pub fn disk(mut self, disk: DiskProfile) -> Self {
+        self.cfg.disk = disk;
+        self
+    }
+
+    pub fn storage(mut self, storage: StorageBackend) -> Self {
+        self.cfg.storage = storage;
+        self
+    }
+
+    pub fn prefetch(mut self, prefetch: PrefetchConfig) -> Self {
+        self.cfg.prefetch = prefetch;
+        self
+    }
+
+    pub fn real_time(mut self, real_time: bool) -> Self {
+        self.cfg.real_time = real_time;
+        self
+    }
+
+    pub fn time_scale(mut self, time_scale: f64) -> Self {
+        self.cfg.time_scale = time_scale;
+        self
+    }
+
+    pub fn max_context(mut self, max_context: usize) -> Self {
+        self.cfg.max_context = max_context;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<EngineConfig> {
+        let c = &self.cfg;
+        anyhow::ensure!(!c.preset.is_empty(), "preset must be named");
+        anyhow::ensure!(c.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(c.max_context >= 1, "max_context must be >= 1");
+        anyhow::ensure!(c.kv.group_size >= 1, "kv.group_size must be >= 1");
+        anyhow::ensure!(c.kv.n_groups >= 1, "kv.n_groups must be >= 1");
+        anyhow::ensure!(c.kv.rank >= 1, "kv.rank must be >= 1");
+        anyhow::ensure!(
+            c.prefetch.queue_depth >= 1,
+            "prefetch.queue_depth must be >= 1"
+        );
+        anyhow::ensure!(
+            c.time_scale >= 0.0 && c.time_scale.is_finite(),
+            "time_scale must be finite and >= 0"
+        );
+        let needed = c.kv.selected_entries() + c.kv.rb_slots;
+        anyhow::ensure!(
+            c.kv.p_sel >= needed,
+            "p_sel {} below selection + rolling ({needed})",
+            c.kv.p_sel
+        );
+        anyhow::ensure!(
+            c.kv.ncap >= needed,
+            "ncap {} inconsistent: below selection + rolling ({needed})",
+            c.kv.ncap
+        );
+        Ok(self.cfg)
+    }
 }
 
 /// Per-sequence engine state.
@@ -121,17 +216,14 @@ pub struct Engine {
     /// Per-layer prediction adapter (policy-dependent construction).
     adapters: Vec<Tensor>,
     seqs: Vec<SeqUnit>,
-    io_tx: Sender<IoReq>,
-    io_rx: Receiver<IoResp>,
-    _io_thread: Option<std::thread::JoinHandle<()>>,
+    /// The asynchronous preload pipeline (or its synchronous fallback).
+    prefetcher: Prefetcher,
     pub breakdown: Breakdown,
     /// One tracker per (seq, layer): overlap is a per-stream statistic
     /// (paper Fig. 8 tracks a single layer across steps).
     pub overlap: Vec<Vec<OverlapTracker>>,
     ncap: usize,
     rank: usize,
-    /// Outstanding I/O issue timestamp (for overlap accounting).
-    issued_at: Option<Instant>,
     /// Layer-0 loads already in flight (issued at the end of the
     /// previous step / a previous decode() call).
     l0_inflight: bool,
@@ -239,11 +331,11 @@ impl Engine {
             Clock::virtual_()
         };
         let pacing = if cfg.real_time { Some(clock.clone()) } else { None };
-        let disk = Arc::new(SimDisk::new(
-            cfg.disk.clone(),
-            Box::new(crate::disk::MemBackend::new()),
-            pacing,
-        ));
+        let backend = cfg.storage.open()?;
+        let disk = Arc::new(SimDisk::new(cfg.disk.clone(), backend, pacing));
+        // the prefetch workers share only the SimDisk (Backend + stats);
+        // everything runtime-bound stays on this thread
+        let prefetcher = Prefetcher::spawn(disk.clone(), &cfg.prefetch);
 
         let sel_entries = cfg.kv.selected_entries();
         let sel_region = (sel_entries / g_layout) * g_layout;
@@ -292,58 +384,6 @@ impl Engine {
             })
             .collect();
 
-        // I/O thread
-        let (io_tx, req_rx) = channel::<IoReq>();
-        let (resp_tx, io_rx) = channel::<IoResp>();
-        let disk2 = disk.clone();
-        let io_thread = std::thread::Builder::new()
-            .name("kvswap-io".into())
-            .spawn(move || {
-                while let Ok(req) = req_rx.recv() {
-                    match req {
-                        IoReq::Stop => break,
-                        IoReq::Loads { layer, per_seq } => {
-                            // queue-depth-aware batch: all extents of the
-                            // layer (across sequences) issued together
-                            let mut out = Vec::with_capacity(per_seq.len());
-                            let mut io_time = Duration::ZERO;
-                            let all: Vec<(u64, usize)> = per_seq
-                                .iter()
-                                .flat_map(|(_, es)| es.iter().map(|e| (e.offset, e.len)))
-                                .collect();
-                            let total: usize = all.iter().map(|e| e.1).sum();
-                            let mut flat = vec![0u8; total];
-                            match disk2.read_batch(&all, &mut flat) {
-                                Ok(d) => io_time += d,
-                                Err(err) => eprintln!("[kvswap-io] read error: {err}"),
-                            }
-                            let mut cursor = 0;
-                            for (seq, extents) in per_seq {
-                                let mut results = Vec::with_capacity(extents.len());
-                                for e in extents {
-                                    results.push((
-                                        e.tag,
-                                        flat[cursor..cursor + e.len].to_vec(),
-                                    ));
-                                    cursor += e.len;
-                                }
-                                out.push((seq, results));
-                            }
-                            if resp_tx
-                                .send(IoResp {
-                                    layer,
-                                    per_seq: out,
-                                    io_time,
-                                })
-                                .is_err()
-                            {
-                                break;
-                            }
-                        }
-                    }
-                }
-            })?;
-
         let batch = cfg.batch;
         let n_layers = spec.n_layers;
         let mut seqs = Vec::with_capacity(batch);
@@ -369,16 +409,13 @@ impl Engine {
             clock,
             adapters,
             seqs,
-            io_tx,
-            io_rx,
-            _io_thread: Some(io_thread),
+            prefetcher,
             breakdown: Breakdown::default(),
             overlap: (0..batch)
                 .map(|_| vec![OverlapTracker::default(); n_layers])
                 .collect(),
             ncap,
             rank,
-            issued_at: None,
             l0_inflight: false,
             klr_cache: (0..n_layers)
                 .map(|_| Tensor::zeros(&[batch, ncap, rank]))
@@ -416,6 +453,19 @@ impl Engine {
         } else {
             sum / n as f64
         }
+    }
+
+    /// Fraction of device read time hidden behind compute over the last
+    /// decode run: `1 - IoWait / read_busy`. The synchronous pipeline
+    /// tends toward 0 (every read is a stall); the threaded prefetcher
+    /// toward 1 (reads overlap compute).
+    pub fn io_overlap_ratio(&self) -> f64 {
+        let busy = self.disk.stats().snapshot().read_busy.as_secs_f64();
+        if busy <= 0.0 {
+            return 0.0;
+        }
+        let wait = self.breakdown.get(Phase::IoWait).as_secs_f64();
+        (1.0 - wait / busy).clamp(0.0, 1.0)
     }
 
     /// Total in-memory KV management bytes across sequences (Fig. 3a).
@@ -627,6 +677,7 @@ impl Engine {
     ) -> anyhow::Result<(DecodeStats, Vec<Tensor>, Vec<Vec<i32>>)> {
         self.warmup()?;
         self.disk.stats().reset();
+        self.prefetcher.reset_counters();
         self.breakdown = Breakdown::default();
         self.decode_t0 = Some(self.clock.now_secs());
         let mut xs = Vec::new();
@@ -682,6 +733,7 @@ impl Engine {
                 io_utilization: snap.io_utilization(self.cfg.disk.read_bw),
                 bytes_loaded: snap.logical_read_bytes,
                 mean_overlap: self.mean_overlap(),
+                prefetch: self.prefetcher.summary(),
             },
             xs,
             token_hist,
@@ -828,7 +880,7 @@ impl Engine {
                 if len > 0 {
                     per_seq.push((
                         i,
-                        vec![Extent {
+                        vec![PlannedExtent {
                             tag: u32::MAX,
                             offset: first,
                             len,
@@ -838,7 +890,7 @@ impl Engine {
                 su.pending_sel[layer].clear();
             }
             self.charge(Phase::Select, t.elapsed());
-            self.send_loads(layer, per_seq);
+            self.send_loads(layer, per_seq)?;
             return Ok(());
         }
 
@@ -943,10 +995,10 @@ impl Engine {
             self.overlap[i][layer].record(&selection);
 
             let loads = self.manager.plan_loads(&mut self.seqs[i].kv, layer, &selection);
-            let extents: Vec<Extent> = match &self.cfg.policy {
+            let extents: Vec<PlannedExtent> = match &self.cfg.policy {
                 Policy::ShadowKv { .. } => loads
                     .iter()
-                    .map(|l| Extent {
+                    .map(|l| PlannedExtent {
                         // V half only: K is reconstructed from memory
                         tag: l.gid,
                         offset: l.offset + (g * self.spec.kv_flat_dim() * 4) as u64,
@@ -955,7 +1007,7 @@ impl Engine {
                     .collect(),
                 _ => loads
                     .iter()
-                    .map(|l| Extent {
+                    .map(|l| PlannedExtent {
                         tag: l.gid,
                         offset: l.offset,
                         len: l.len,
@@ -966,41 +1018,52 @@ impl Engine {
             per_seq_loads.push((i, extents));
         }
         self.charge(Phase::Select, t.elapsed());
-        self.send_loads(layer, per_seq_loads);
+        self.send_loads(layer, per_seq_loads)?;
         Ok(())
     }
 
-    fn send_loads(&mut self, layer: usize, per_seq: Vec<(usize, Vec<Extent>)>) {
-        self.issued_at = Some(Instant::now());
-        self.io_tx
-            .send(IoReq::Loads { layer, per_seq })
-            .expect("io thread gone");
+    fn send_loads(
+        &mut self,
+        layer: usize,
+        per_seq: Vec<(usize, Vec<PlannedExtent>)>,
+    ) -> anyhow::Result<()> {
+        // threaded mode: workers start the reads immediately and `submit`
+        // only blocks at the queue-depth bound (backpressure); sync mode
+        // just queues the plan
+        self.prefetcher.submit(PreloadPlan { layer, per_seq })?;
+        Ok(())
     }
 
+    /// Block until layer `layer`'s staged bytes are ready, then commit
+    /// them into the cache structures. `Phase::IoWait` charges only the
+    /// *residual* wait — the portion of device time compute did not hide.
     fn await_loads(&mut self, layer: usize) -> anyhow::Result<()> {
         let wait_t = Instant::now();
-        let resp = self.io_rx.recv().map_err(|_| anyhow::anyhow!("io thread gone"))?;
-        anyhow::ensure!(resp.layer == layer, "io pipeline out of order");
+        let staged = self.prefetcher.recv()?;
+        anyhow::ensure!(staged.layer == layer, "prefetch pipeline out of order");
         if layer == 0 {
             self.l0_inflight = false;
         }
         if self.cfg.real_time {
-            // physical overlap: blocked time is the true stall
+            // physical overlap: blocked time is the true residual stall
+            // (in sync mode the read itself runs inside recv, so the
+            // whole read latency is — correctly — charged here)
             self.breakdown.add(Phase::IoWait, wait_t.elapsed());
+        } else if self.prefetcher.is_synchronous() {
+            // no pipeline: nothing hides the modeled device time
+            self.breakdown.add(Phase::IoWait, staged.io_time);
+            self.clock.advance(staged.io_time);
         } else {
             // virtual overlap accounting (Appendix A.4): stall is the
             // modeled I/O time not hidden by compute since issue
-            let since_issue = self
-                .issued_at
-                .map(|t| t.elapsed())
-                .unwrap_or(Duration::ZERO);
-            let stall = resp.io_time.saturating_sub(since_issue);
+            let stall = staged.io_time.saturating_sub(staged.issued_at.elapsed());
             self.breakdown.add(Phase::IoWait, stall);
             self.clock.advance(stall);
         }
         // commit payloads
         let t = Instant::now();
-        for (seq_idx, results) in resp.per_seq {
+        for (seq_idx, results) in staged.per_seq {
+            let mut plain: Vec<(u32, Vec<u8>)> = Vec::new();
             for (tag, bytes) in results {
                 if tag == u32::MAX {
                     // FlexGen whole-layer read: stage groups 0..n
@@ -1044,10 +1107,13 @@ impl Engine {
                         su.staging[layer].insert(tag, payload);
                     }
                 } else {
-                    let su = &mut self.seqs[seq_idx];
-                    let staging = &mut su.staging[layer];
-                    self.manager.commit_load(&mut su.kv, layer, tag, &bytes, staging);
+                    plain.push((tag, bytes));
                 }
+            }
+            if !plain.is_empty() {
+                let su = &mut self.seqs[seq_idx];
+                let staging = &mut su.staging[layer];
+                self.manager.commit_staged(&mut su.kv, layer, plain, staging);
             }
         }
         self.charge(Phase::ReuseMgmt, t.elapsed());
@@ -1247,15 +1313,6 @@ impl SeqUnit {
     }
 }
 
-impl Drop for Engine {
-    fn drop(&mut self) {
-        let _ = self.io_tx.send(IoReq::Stop);
-        if let Some(h) = self._io_thread.take() {
-            let _ = h.join();
-        }
-    }
-}
-
 // ---------------------------------------------------------------------
 // layer routing
 
@@ -1267,5 +1324,80 @@ impl Engine {
             Policy::FullMemory => self.full_attention_layer(layer, x, true),
             _ => self.compute_layer(layer, x),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accepts_sound_configs() {
+        let cfg = EngineConfig::builder()
+            .preset("nano")
+            .batch(2)
+            .policy(Policy::KvSwap)
+            .max_context(1024)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.batch, 2);
+        assert_eq!(cfg.max_context, 1024);
+        assert_eq!(cfg.prefetch, PrefetchConfig::default());
+        // the synchronous-baseline variant is valid too
+        assert!(EngineConfig::builder()
+            .prefetch(PrefetchConfig::synchronous())
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_zero_group_size() {
+        let kv = KvSwapConfig {
+            group_size: 0,
+            ..KvSwapConfig::default()
+        };
+        assert!(EngineConfig::builder().kv(kv).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_queue_depth() {
+        let p = PrefetchConfig {
+            queue_depth: 0,
+            ..PrefetchConfig::default()
+        };
+        assert!(EngineConfig::builder().prefetch(p).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_ncap_and_attention_width() {
+        // ncap smaller than what selection + rolling buffer must hold
+        let kv = KvSwapConfig {
+            ncap: 100,
+            ..KvSwapConfig::default()
+        };
+        assert!(EngineConfig::builder().kv(kv).build().is_err());
+        let kv = KvSwapConfig {
+            p_sel: 64,
+            ..KvSwapConfig::default()
+        };
+        assert!(EngineConfig::builder().kv(kv).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_shapes() {
+        assert!(EngineConfig::builder().batch(0).build().is_err());
+        assert!(EngineConfig::builder().preset("").build().is_err());
+        assert!(EngineConfig::builder().max_context(0).build().is_err());
+        assert!(EngineConfig::builder().time_scale(-1.0).build().is_err());
+    }
+
+    #[test]
+    fn default_remains_available_for_tests() {
+        // `Default` must stay a valid escape hatch
+        let d = EngineConfig::default();
+        let validated = EngineConfig::builder().build().unwrap();
+        assert_eq!(d.preset, validated.preset);
+        assert_eq!(d.kv, validated.kv);
     }
 }

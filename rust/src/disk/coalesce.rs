@@ -1,0 +1,125 @@
+//! Read coalescing — the paper's read orchestration (§3.3): adjacent or
+//! near-adjacent group extents are merged into large sequential reads so
+//! the device sees few big operations instead of many small ones.
+//!
+//! Merging across a small byte gap deliberately over-reads the gap: on
+//! every profiled device one op-latency charge costs far more than a few
+//! KiB of extra transfer (e.g. NVMe's 80 µs ≈ 144 KiB at 1.8 GB/s), so a
+//! bounded `max_gap` trades wasted bytes for saved commands.
+
+/// One physical read covering one or more logical extents.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Run {
+    pub offset: u64,
+    pub len: usize,
+    /// `(extent index, byte delta of the extent start inside the run)`,
+    /// indices referring to the input slice passed to [`coalesce`].
+    pub members: Vec<(usize, usize)>,
+}
+
+/// Merge `extents` (`(offset, len)` pairs, any order, overlaps allowed)
+/// into sequential runs: two extents join the same run when the byte gap
+/// between them is at most `max_gap`. Every input extent appears in
+/// exactly one run's member list; scattering `run[delta..delta+len]`
+/// back out reproduces a direct read of each extent byte-for-byte.
+pub fn coalesce(extents: &[(u64, usize)], max_gap: u64) -> Vec<Run> {
+    let mut order: Vec<usize> = (0..extents.len()).collect();
+    order.sort_by_key(|&i| extents[i]);
+    let mut runs: Vec<Run> = Vec::new();
+    for i in order {
+        let (off, len) = extents[i];
+        match runs.last_mut() {
+            Some(r) if off - r.offset <= (r.len as u64).saturating_add(max_gap) => {
+                // `off >= r.offset` by sort order, so the delta fits usize
+                // whenever the run itself does
+                let delta = (off - r.offset) as usize;
+                r.len = r.len.max(delta + len);
+                r.members.push((i, delta));
+            }
+            _ => runs.push(Run {
+                offset: off,
+                len,
+                members: vec![(i, 0)],
+            }),
+        }
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_extents_merge_into_one_run() {
+        let runs = coalesce(&[(0, 64), (64, 64), (128, 64)], 0);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].offset, 0);
+        assert_eq!(runs[0].len, 192);
+        assert_eq!(runs[0].members, vec![(0, 0), (1, 64), (2, 128)]);
+    }
+
+    #[test]
+    fn gap_threshold_controls_merging() {
+        // 32-byte hole between the extents
+        let e = [(0u64, 64usize), (96, 64)];
+        assert_eq!(coalesce(&e, 0).len(), 2);
+        assert_eq!(coalesce(&e, 31).len(), 2);
+        let merged = coalesce(&e, 32);
+        assert_eq!(merged.len(), 1);
+        // the run spans the hole
+        assert_eq!(merged[0].len, 160);
+        assert_eq!(merged[0].members[1], (1, 96));
+    }
+
+    #[test]
+    fn unsorted_input_keeps_original_indices() {
+        let runs = coalesce(&[(128, 32), (0, 32), (32, 32)], 0);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].members, vec![(1, 0), (2, 32)]);
+        assert_eq!(runs[1].members, vec![(0, 0)]);
+    }
+
+    #[test]
+    fn overlapping_extents_share_a_run() {
+        let runs = coalesce(&[(0, 100), (50, 100), (100, 10)], 0);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].len, 150);
+        assert_eq!(runs[0].members, vec![(0, 0), (1, 50), (2, 100)]);
+    }
+
+    #[test]
+    fn duplicate_extents_both_served() {
+        let runs = coalesce(&[(64, 32), (64, 32)], 0);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].members.len(), 2);
+        assert_eq!(runs[0].len, 32);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        assert!(coalesce(&[], 4096).is_empty());
+        let one = coalesce(&[(42, 7)], 4096);
+        assert_eq!(one.len(), 1);
+        assert_eq!((one[0].offset, one[0].len), (42, 7));
+    }
+
+    #[test]
+    fn every_extent_appears_exactly_once() {
+        let extents: Vec<(u64, usize)> =
+            (0..50).map(|i| ((i * 137) % 4096, 64 + i as usize)).collect();
+        for gap in [0u64, 16, 512, 1 << 20] {
+            let runs = coalesce(&extents, gap);
+            let mut seen = vec![0u32; extents.len()];
+            for r in &runs {
+                for &(idx, delta) in &r.members {
+                    seen[idx] += 1;
+                    // member stays inside its run
+                    assert!(delta + extents[idx].1 <= r.len);
+                    assert_eq!(r.offset + delta as u64, extents[idx].0);
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "gap {gap}");
+        }
+    }
+}

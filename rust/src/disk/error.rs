@@ -1,0 +1,127 @@
+//! Typed storage errors for the `disk` module's public API.
+//!
+//! The prefetch pipeline and retry logic need to *match* on failure kind
+//! (a bounds bug is fatal, a closed queue means shutdown, a timeout may
+//! be retried) rather than string-matching opaque error messages.
+//! Everything inside `disk/` speaks `DiskError`; callers convert to
+//! their generic error type at the engine boundary via the std `Error`
+//! impl.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Result alias used throughout the `disk` module.
+pub type DiskResult<T> = Result<T, DiskError>;
+
+/// Storage failure, by kind.
+#[derive(Debug)]
+pub enum DiskError {
+    /// A read past the end of the backing store, or an offset/length pair
+    /// that overflows the address space.
+    OutOfBounds {
+        offset: u64,
+        len: usize,
+        /// Current size of the backing store.
+        size: u64,
+    },
+    /// An underlying I/O failure (real-file backends), tagged with the
+    /// extent that was being accessed.
+    Io {
+        source: std::io::Error,
+        offset: u64,
+        len: usize,
+    },
+    /// The prefetch queue (or its worker pool) has shut down.
+    QueueClosed,
+    /// A staged buffer did not arrive within the wait bound.
+    Timeout { waited: Duration },
+}
+
+impl DiskError {
+    /// Tag an `io::Error` with the extent being accessed.
+    pub fn io(source: std::io::Error, offset: u64, len: usize) -> DiskError {
+        DiskError::Io {
+            source,
+            offset,
+            len,
+        }
+    }
+}
+
+impl fmt::Display for DiskError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DiskError::OutOfBounds { offset, len, size } => write!(
+                f,
+                "read/write out of bounds: offset {offset} + len {len} exceeds backing size {size}"
+            ),
+            DiskError::Io {
+                source,
+                offset,
+                len,
+            } => write!(f, "storage I/O error at offset {offset} (len {len}): {source}"),
+            DiskError::QueueClosed => write!(f, "prefetch queue closed"),
+            DiskError::Timeout { waited } => {
+                write!(f, "staged buffer not ready after {waited:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DiskError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DiskError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_extent_context() {
+        let e = DiskError::OutOfBounds {
+            offset: 100,
+            len: 8,
+            size: 64,
+        };
+        let s = e.to_string();
+        assert!(s.contains("100") && s.contains('8') && s.contains("64"), "{s}");
+
+        let io = DiskError::io(
+            std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof"),
+            42,
+            512,
+        );
+        assert!(io.to_string().contains("42"));
+    }
+
+    #[test]
+    fn error_kinds_are_matchable() {
+        // the whole point of the typed enum: callers branch on kind
+        let errs = [
+            DiskError::QueueClosed,
+            DiskError::Timeout {
+                waited: Duration::from_secs(1),
+            },
+        ];
+        let retryable = errs
+            .iter()
+            .filter(|e| matches!(e, DiskError::Timeout { .. }))
+            .count();
+        assert_eq!(retryable, 1);
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error;
+        let e = DiskError::io(std::io::Error::other("disk on fire"), 0, 1);
+        assert!(e.source().is_some());
+        // generic-error conversion works at the engine boundary
+        let b: Box<dyn Error + Send + Sync> = e.into();
+        assert!(b.source().unwrap().to_string().contains("disk on fire"));
+    }
+}

@@ -1,18 +1,39 @@
 //! Disk substrate: device timing profiles (NVMe/eMMC/UFS/SD) with
 //! page-granule read amplification, byte backends (memory / real file),
-//! the `SimDisk` simulated device, and I/O statistics.
+//! the `SimDisk` simulated device, I/O statistics, and the asynchronous
+//! prefetch pipeline.
 //!
 //! Paper mapping: §2.3 (Fig. 2 bandwidth-vs-block-size behaviour) is
 //! produced by `DiskProfile`; every offloading policy's I/O goes through
 //! `SimDisk` so the benches can attribute logical/physical bytes and busy
-//! time uniformly.
+//! time uniformly; §3.3's read orchestration lives in [`coalesce`] and
+//! the overlap of preloads with compute in [`prefetch`].
+//!
+//! Public API shape:
+//!
+//! * everything here returns [`DiskResult`] / [`DiskError`] — typed
+//!   errors callers can match on; conversion to a generic error type
+//!   happens only at the engine boundary;
+//! * multi-extent access goes through [`Backend::read_batch`] (with
+//!   per-backend submission strategies), fed by the coalescer so the
+//!   "merge small reads into big ones" logic exists in exactly one place;
+//! * [`StorageBackend`] selects where bytes live (RAM, a real file, or a
+//!   caller-supplied backend) without the engine knowing the difference.
 
 pub mod backend;
+pub mod coalesce;
+pub mod error;
+pub mod prefetch;
 pub mod profile;
 pub mod sim;
 pub mod stats;
 
-pub use backend::{Backend, FileBackend, MemBackend};
+pub use backend::{Backend, FileBackend, MemBackend, ReadReq, StorageBackend};
+pub use coalesce::{coalesce, Run};
+pub use error::{DiskError, DiskResult};
+pub use prefetch::{
+    BufferPool, PlannedExtent, Prefetcher, PreloadPlan, PrefetchSummary, StagedLoad,
+};
 pub use profile::DiskProfile;
 pub use sim::SimDisk;
 pub use stats::{DiskSnapshot, DiskStats};

@@ -10,26 +10,29 @@
 //!   engine folds the returned modeled `Duration`s into its pipeline
 //!   accounting.
 //!
-//! All ops update `DiskStats` (logical vs physical bytes, busy time) from
-//! which the benches derive I/O utilization (paper Fig. 12 annotations).
+//! The backend is shared (`Arc`) so the prefetch worker pool and the
+//! engine thread address the same bytes. All ops speak [`DiskResult`] and
+//! update `DiskStats` (logical vs physical bytes, busy time) from which
+//! the benches derive I/O utilization (paper Fig. 12 annotations).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::backend::Backend;
+use super::backend::{Backend, ReadReq};
+use super::error::DiskResult;
 use super::profile::DiskProfile;
 use super::stats::DiskStats;
 use crate::util::clock::Clock;
 
 pub struct SimDisk {
     profile: DiskProfile,
-    backend: Box<dyn Backend>,
+    backend: Arc<dyn Backend>,
     pacing: Option<Clock>,
     stats: Arc<DiskStats>,
 }
 
 impl SimDisk {
-    pub fn new(profile: DiskProfile, backend: Box<dyn Backend>, pacing: Option<Clock>) -> SimDisk {
+    pub fn new(profile: DiskProfile, backend: Arc<dyn Backend>, pacing: Option<Clock>) -> SimDisk {
         SimDisk {
             profile,
             backend,
@@ -40,7 +43,7 @@ impl SimDisk {
 
     /// In-memory simulated disk without pacing (timing returned, not slept).
     pub fn in_memory(profile: DiskProfile) -> SimDisk {
-        SimDisk::new(profile, Box::new(super::backend::MemBackend::new()), None)
+        SimDisk::new(profile, Arc::new(super::backend::MemBackend::new()), None)
     }
 
     pub fn profile(&self) -> &DiskProfile {
@@ -52,7 +55,7 @@ impl SimDisk {
     }
 
     /// Read `buf.len()` bytes at `offset`; returns the *modeled* duration.
-    pub fn read(&self, offset: u64, buf: &mut [u8]) -> anyhow::Result<Duration> {
+    pub fn read(&self, offset: u64, buf: &mut [u8]) -> DiskResult<Duration> {
         self.backend.read_at(offset, buf)?;
         let dur = self.profile.read_time(offset, buf.len() as u64);
         let phys = self.profile.physical_bytes(offset, buf.len() as u64);
@@ -63,14 +66,10 @@ impl SimDisk {
         Ok(dur)
     }
 
-    /// Multi-extent read: contiguous runs are coalesced by the caller;
-    /// each extent is one operation (one latency charge). Returns the sum
-    /// of modeled durations (a queue-depth-1 device).
-    pub fn read_extents(
-        &self,
-        extents: &[(u64, usize)],
-        out: &mut [u8],
-    ) -> anyhow::Result<Duration> {
+    /// Multi-extent read where each extent is an independent operation
+    /// (one latency charge each, queue-depth 1) — the *uncoalesced*
+    /// baseline. Data lands in `out` back-to-back.
+    pub fn read_extents(&self, extents: &[(u64, usize)], out: &mut [u8]) -> DiskResult<Duration> {
         let mut total = Duration::ZERO;
         let mut cursor = 0;
         for &(off, len) in extents {
@@ -80,37 +79,23 @@ impl SimDisk {
         Ok(total)
     }
 
-    /// Queue-depth-aware batched read: all extents are issued together,
-    /// so command latencies overlap up to the device's native queue
-    /// depth while transfers serialize on the bus (the paper's
-    /// "orchestrates read patterns to match storage device
-    /// characteristics"). Data lands in `out` back-to-back. Returns the
-    /// modeled duration of the whole batch (paced once in real mode).
-    pub fn read_batch(
-        &self,
-        extents: &[(u64, usize)],
-        out: &mut [u8],
-    ) -> anyhow::Result<Duration> {
-        let mut cursor = 0;
+    /// Queue-depth-aware batched read: all requests are issued together
+    /// through [`Backend::read_batch`], so command latencies overlap up
+    /// to the device's native queue depth while transfers serialize on
+    /// the bus (the paper's "orchestrates read patterns to match storage
+    /// device characteristics"). Returns the modeled duration of the
+    /// whole batch (paced once in real mode).
+    pub fn read_batch(&self, reqs: &mut [ReadReq]) -> DiskResult<Duration> {
+        self.backend.read_batch(reqs)?;
         let mut total_phys = 0u64;
-        for &(off, len) in extents {
-            self.backend.read_at(off, &mut out[cursor..cursor + len])?;
-            total_phys += self.profile.physical_bytes(off, len as u64);
-            cursor += len;
+        let mut logical = 0u64;
+        for r in reqs.iter() {
+            total_phys += self.profile.physical_bytes(r.offset, r.len() as u64);
+            logical += r.len() as u64;
         }
-        let dur = self
-            .profile
-            .batched_read_time(total_phys, extents.len() as u64);
-        let logical: u64 = extents.iter().map(|e| e.1 as u64).sum();
-        for &(off, len) in extents {
-            let _ = (off, len);
-        }
-        self.stats.record_batch_read(
-            extents.len() as u64,
-            logical,
-            total_phys,
-            dur,
-        );
+        let dur = self.profile.batched_read_time(total_phys, reqs.len() as u64);
+        self.stats
+            .record_batch_read(reqs.len() as u64, logical, total_phys, dur);
         if let Some(c) = &self.pacing {
             c.advance(dur);
         }
@@ -118,7 +103,7 @@ impl SimDisk {
     }
 
     /// Write; returns modeled duration.
-    pub fn write(&self, offset: u64, data: &[u8]) -> anyhow::Result<Duration> {
+    pub fn write(&self, offset: u64, data: &[u8]) -> DiskResult<Duration> {
         self.backend.write_at(offset, data)?;
         let dur = self.profile.write_time(offset, data.len() as u64);
         let phys = self.profile.physical_bytes(offset, data.len() as u64);
@@ -178,9 +163,7 @@ mod tests {
         let d = SimDisk::in_memory(DiskProfile::nvme());
         d.write(0, &(0..128u8).collect::<Vec<_>>()).unwrap();
         let mut out = vec![0u8; 8];
-        let t = d
-            .read_extents(&[(0, 4), (100, 4)], &mut out)
-            .unwrap();
+        let t = d.read_extents(&[(0, 4), (100, 4)], &mut out).unwrap();
         assert_eq!(&out[..4], &[0, 1, 2, 3]);
         assert_eq!(&out[4..], &[100, 101, 102, 103]);
         // two ops => two latency charges
@@ -199,7 +182,7 @@ mod tests {
                 page_bytes: 512,
                 queue_depth: 1,
             },
-            Box::new(MemBackend::new()),
+            Arc::new(MemBackend::new()),
             Some(clock),
         );
         d.write(0, &vec![0u8; 4096]).unwrap();
@@ -214,8 +197,15 @@ mod tests {
         let d = SimDisk::in_memory(DiskProfile::nvme()); // QD 16
         d.write(0, &vec![1u8; 1 << 20]).unwrap();
         let extents: Vec<(u64, usize)> = (0..32).map(|i| (i * 8192, 4096usize)).collect();
+        let mut reqs: Vec<ReadReq> = extents
+            .iter()
+            .map(|&(off, len)| ReadReq::new(off, len))
+            .collect();
+        let t_batch = d.read_batch(&mut reqs).unwrap();
+        for req in &reqs {
+            assert!(req.buf.iter().all(|&b| b == 1));
+        }
         let mut out = vec![0u8; 32 * 4096];
-        let t_batch = d.read_batch(&extents, &mut out).unwrap();
         let t_serial = d.read_extents(&extents, &mut out).unwrap();
         // 32 ops: serial pays 32 latencies, batched pays ceil(32/16) = 2
         assert!(
@@ -235,8 +225,7 @@ mod tests {
         d.write(0, &vec![3u8; 1 << 20]).unwrap();
         let mut out = vec![0u8; 65536];
         // 128 scattered 512-B entries, page-spread
-        let scattered: Vec<(u64, usize)> =
-            (0..128).map(|i| (i * 8192, 512usize)).collect();
+        let scattered: Vec<(u64, usize)> = (0..128).map(|i| (i * 8192, 512usize)).collect();
         let t_scatter = d.read_extents(&scattered, &mut out).unwrap();
         // same 64 KiB as one extent
         let t_grouped = d.read(0, &mut out).unwrap();

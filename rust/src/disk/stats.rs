@@ -15,6 +15,8 @@ pub struct DiskStats {
     physical_write: AtomicU64,
     read_busy_ns: AtomicU64,
     write_busy_ns: AtomicU64,
+    coalesce_extents_in: AtomicU64,
+    coalesce_runs_out: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,6 +29,10 @@ pub struct DiskSnapshot {
     pub physical_write_bytes: u64,
     pub read_busy: Duration,
     pub write_busy: Duration,
+    /// Logical extents that entered the prefetcher's coalescer…
+    pub coalesce_extents_in: u64,
+    /// …and the physical runs it issued for them.
+    pub coalesce_runs_out: u64,
 }
 
 impl DiskStats {
@@ -47,6 +53,13 @@ impl DiskStats {
             .fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// One coalescing pass: `extents_in` logical extents became
+    /// `runs_out` physical reads.
+    pub fn record_coalesce(&self, extents_in: u64, runs_out: u64) {
+        self.coalesce_extents_in.fetch_add(extents_in, Ordering::Relaxed);
+        self.coalesce_runs_out.fetch_add(runs_out, Ordering::Relaxed);
+    }
+
     pub fn record_write(&self, logical: u64, physical: u64, dur: Duration) {
         self.write_ops.fetch_add(1, Ordering::Relaxed);
         self.logical_write.fetch_add(logical, Ordering::Relaxed);
@@ -65,6 +78,8 @@ impl DiskStats {
             physical_write_bytes: self.physical_write.load(Ordering::Relaxed),
             read_busy: Duration::from_nanos(self.read_busy_ns.load(Ordering::Relaxed)),
             write_busy: Duration::from_nanos(self.write_busy_ns.load(Ordering::Relaxed)),
+            coalesce_extents_in: self.coalesce_extents_in.load(Ordering::Relaxed),
+            coalesce_runs_out: self.coalesce_runs_out.load(Ordering::Relaxed),
         }
     }
 
@@ -77,6 +92,8 @@ impl DiskStats {
         self.physical_write.store(0, Ordering::Relaxed);
         self.read_busy_ns.store(0, Ordering::Relaxed);
         self.write_busy_ns.store(0, Ordering::Relaxed);
+        self.coalesce_extents_in.store(0, Ordering::Relaxed);
+        self.coalesce_runs_out.store(0, Ordering::Relaxed);
     }
 }
 
@@ -88,6 +105,15 @@ impl DiskSnapshot {
             return 1.0;
         }
         self.logical_read_bytes as f64 / self.physical_read_bytes as f64
+    }
+
+    /// Mean logical extents folded into each physical read by the
+    /// prefetcher (1.0 when coalescing never fired or never merged).
+    pub fn coalesce_factor(&self) -> f64 {
+        if self.coalesce_runs_out == 0 {
+            return 1.0;
+        }
+        self.coalesce_extents_in as f64 / self.coalesce_runs_out as f64
     }
 
     /// Effective bandwidth relative to `peak_bw` over the busy period —
@@ -128,6 +154,20 @@ mod tests {
         assert!((s.snapshot().read_amplification_efficiency() - 0.125).abs() < 1e-9);
         let empty = DiskStats::default();
         assert_eq!(empty.snapshot().read_amplification_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn coalesce_factor_tracks_merge_ratio() {
+        let s = DiskStats::default();
+        assert_eq!(s.snapshot().coalesce_factor(), 1.0);
+        s.record_coalesce(8, 2);
+        s.record_coalesce(4, 2);
+        let snap = s.snapshot();
+        assert_eq!(snap.coalesce_extents_in, 12);
+        assert_eq!(snap.coalesce_runs_out, 4);
+        assert!((snap.coalesce_factor() - 3.0).abs() < 1e-12);
+        s.reset();
+        assert_eq!(s.snapshot().coalesce_extents_in, 0);
     }
 
     #[test]

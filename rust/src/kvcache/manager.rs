@@ -199,6 +199,21 @@ impl KvManager {
         }
     }
 
+    /// Commit a whole batch of staged prefetch loads (the handoff from
+    /// the prefetch pipeline): each `(gid, bytes)` pair lands in the
+    /// reuse buffer or the per-step staging map.
+    pub fn commit_staged(
+        &self,
+        seq: &mut SeqState,
+        layer: usize,
+        loads: Vec<(u32, Vec<u8>)>,
+        staging: &mut HashMap<u32, Vec<f32>>,
+    ) {
+        for (gid, bytes) in loads {
+            self.commit_load(seq, layer, gid, &bytes, staging);
+        }
+    }
+
     /// Build the slot map for this layer's attention call.
     pub fn slot_map(&self, seq: &SeqState, layer: usize, selection: &[u32]) -> SlotMap {
         let st = &seq.layers[layer];

@@ -11,6 +11,30 @@
 //! calling Layer 1 Pallas kernels) loaded via the PJRT C API — Python is
 //! never on the request path. See `DESIGN.md` for the full architecture
 //! and `EXPERIMENTS.md` for the paper-vs-measured results.
+//!
+//! ## Storage API and the prefetch pipeline
+//!
+//! The disk substrate ([`disk`]) is built around three seams:
+//!
+//! * [`disk::Backend`] — where offloaded bytes physically live (RAM file
+//!   image, a real file with positional syscalls, or a caller-supplied
+//!   implementation via [`disk::StorageBackend::Custom`]). Multi-extent
+//!   access goes through `Backend::read_batch`, which backends override
+//!   with their preferred submission order. Everything speaks typed
+//!   [`disk::DiskError`]s.
+//! * [`disk::coalesce`] — merges near-adjacent planned extents into large
+//!   sequential runs (paper §3.3: over-reading a small gap is cheaper
+//!   than paying another device op).
+//! * [`disk::Prefetcher`] — a worker pool that consumes per-layer
+//!   [`disk::PreloadPlan`]s ahead of compute, stages the coalesced bytes
+//!   into recycled buffers, and hands them back over a bounded channel in
+//!   submission order (paper §3.4). With `workers: 0` it degrades to a
+//!   synchronous, bit-identical baseline pipeline.
+//!
+//! The decode engine ([`coordinator`]) never reads the disk on its hot
+//! path: plans are submitted while earlier layers compute, and
+//! `Phase::IoWait` measures only the residual stall. Engine configs are
+//! built with the validating [`coordinator::EngineConfig::builder`].
 
 pub mod util;
 pub mod config;

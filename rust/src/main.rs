@@ -13,11 +13,11 @@
 //!   kvswap serve --addr 127.0.0.1:7777 --policy kvswap --disk nvme
 
 use kvswap::baselines::{configure, Budget};
-use kvswap::config::KvSwapConfig;
+use kvswap::config::{KvSwapConfig, PrefetchConfig};
 use kvswap::coordinator::batcher::BatcherConfig;
 use kvswap::coordinator::router::Router;
 use kvswap::coordinator::{Engine, EngineConfig, Policy};
-use kvswap::disk::DiskProfile;
+use kvswap::disk::{DiskProfile, StorageBackend};
 use kvswap::metrics::Table;
 use kvswap::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
 use kvswap::tuner;
@@ -69,17 +69,35 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
     if args.flag("no-reuse") {
         kv.use_reuse = false;
     }
-    Ok(EngineConfig {
-        preset: args.str_or("preset", "nano"),
-        batch: args.usize_or("batch", 1),
-        policy,
-        kv,
-        disk,
-        real_time: args.flag("real-time"),
-        time_scale: args.f64_or("time-scale", 1.0),
-        max_context: args.usize_or("max-context", args.usize_or("context", 2048)),
-        seed: args.u64_or("seed", 0),
-    })
+    let prefetch = if args.flag("sync-io") {
+        PrefetchConfig::synchronous()
+    } else {
+        PrefetchConfig {
+            workers: args.usize_or("prefetch-workers", PrefetchConfig::default().workers),
+            queue_depth: args.usize_or("queue-depth", PrefetchConfig::default().queue_depth),
+            coalesce_gap: args.usize_or(
+                "coalesce-gap",
+                PrefetchConfig::default().coalesce_gap as usize,
+            ) as u64,
+        }
+    };
+    let storage = match args.get("storage-file") {
+        Some(path) => StorageBackend::File(path.into()),
+        None => StorageBackend::Mem,
+    };
+    EngineConfig::builder()
+        .preset(args.str_or("preset", "nano"))
+        .batch(args.usize_or("batch", 1))
+        .policy(policy)
+        .kv(kv)
+        .disk(disk)
+        .storage(storage)
+        .prefetch(prefetch)
+        .real_time(args.flag("real-time"))
+        .time_scale(args.f64_or("time-scale", 1.0))
+        .max_context(args.usize_or("max-context", args.usize_or("context", 2048)))
+        .seed(args.u64_or("seed", 0))
+        .build()
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -167,17 +185,14 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         }
         let mut e = Engine::new(
             rt.clone(),
-            EngineConfig {
-                preset: preset.clone(),
-                batch: b,
-                policy: Policy::KvSwap,
-                kv: KvSwapConfig::default(),
-                disk: disk.clone(),
-                real_time: false,
-                time_scale: 1.0,
-                max_context: s,
-                seed: 0,
-            },
+            EngineConfig::builder()
+                .preset(preset.clone())
+                .batch(b)
+                .policy(Policy::KvSwap)
+                .kv(KvSwapConfig::default())
+                .disk(disk.clone())
+                .max_context(s)
+                .build()?,
         )?;
         e.ingest_synthetic(&vec![s - 64; b])?;
         let (stats, _, _) = e.decode(6, false, None)?;

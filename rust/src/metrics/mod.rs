@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::disk::PrefetchSummary;
 use crate::util::mathx;
 
 /// Decode phases instrumented by the engine (paper Fig. 13a breakdown).
@@ -12,6 +13,9 @@ pub enum Phase {
     Embed,
     Predict,
     Select,
+    /// Residual I/O stall: the portion of device read time compute did
+    /// NOT hide (with the threaded prefetcher this is a remainder, not
+    /// the full read latency).
     IoWait,
     Gather,
     Attention,
@@ -118,6 +122,9 @@ pub struct DecodeStats {
     pub io_utilization: f64,
     pub bytes_loaded: u64,
     pub mean_overlap: f64,
+    /// What the prefetch pipeline did (plans, extents→runs coalescing,
+    /// staged bytes) over this run.
+    pub prefetch: PrefetchSummary,
 }
 
 impl DecodeStats {
@@ -225,6 +232,7 @@ mod tests {
             io_utilization: 0.5,
             bytes_loaded: 1 << 20,
             mean_overlap: 0.7,
+            prefetch: PrefetchSummary::default(),
         };
         assert!((s.tokens_per_sec() - 25.0).abs() < 1e-9);
     }

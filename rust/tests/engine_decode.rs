@@ -23,17 +23,16 @@ fn runtime() -> Option<Rc<PjrtRuntime>> {
 }
 
 fn cfg(policy: Policy, batch: usize, context: usize) -> EngineConfig {
-    EngineConfig {
-        preset: "nano".into(),
-        batch,
-        policy,
-        kv: KvSwapConfig::default(),
-        disk: DiskProfile::nvme(),
-        real_time: false,
-        time_scale: 1.0,
-        max_context: context.max(512),
-        seed: 7,
-    }
+    EngineConfig::builder()
+        .preset("nano")
+        .batch(batch)
+        .policy(policy)
+        .kv(KvSwapConfig::default())
+        .disk(DiskProfile::nvme())
+        .max_context(context.max(512))
+        .seed(7)
+        .build()
+        .expect("valid test config")
 }
 
 #[test]

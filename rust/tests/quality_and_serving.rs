@@ -22,17 +22,15 @@ fn runtime() -> Option<Rc<PjrtRuntime>> {
 }
 
 fn cfg(policy: Policy, kv: KvSwapConfig) -> EngineConfig {
-    EngineConfig {
-        preset: "nano".into(),
-        batch: 1,
-        policy,
-        kv,
-        disk: DiskProfile::nvme(),
-        real_time: false,
-        time_scale: 1.0,
-        max_context: 2048,
-        seed: 0,
-    }
+    EngineConfig::builder()
+        .preset("nano")
+        .batch(1)
+        .policy(policy)
+        .kv(kv)
+        .disk(DiskProfile::nvme())
+        .max_context(2048)
+        .build()
+        .expect("valid test config")
 }
 
 #[test]
@@ -90,17 +88,15 @@ fn niah_kvswap_retrieves_needle() {
 #[test]
 fn router_serves_a_trace_in_process() {
     let Some(_) = runtime() else { return };
-    let engine_cfg = EngineConfig {
-        preset: "nano".into(),
-        batch: 1,
-        policy: Policy::KvSwap,
-        kv: KvSwapConfig::default(),
-        disk: DiskProfile::nvme(),
-        real_time: false,
-        time_scale: 1.0,
-        max_context: 1024,
-        seed: 0,
-    };
+    let engine_cfg = EngineConfig::builder()
+        .preset("nano")
+        .batch(1)
+        .policy(Policy::KvSwap)
+        .kv(KvSwapConfig::default())
+        .disk(DiskProfile::nvme())
+        .max_context(1024)
+        .build()
+        .expect("valid router config");
     let batcher_cfg = BatcherConfig {
         supported: vec![1, 2],
         linger_s: 0.01,
