@@ -8,3 +8,11 @@ cd "$(dirname "$0")/rust"
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo test -q
+
+# fault-matrix smoke: the CLI decode path under a 5% flaky disk (seeded,
+# reproducible) must complete and recover, not crash (needs artifacts)
+ARTIFACTS="${KVSWAP_ARTIFACTS:-artifacts}"
+if [ -f "$ARTIFACTS/manifest.json" ]; then
+  cargo run --release -q -- run --policy kvswap --context 512 --steps 8 \
+    --fault-rate 0.05 --fault-corrupt-rate 0.02 --fault-seed 7 --io-retries 5
+fi

@@ -5,7 +5,7 @@
 
 use kvswap::baselines::{configure, Budget};
 use kvswap::bench::{banner, engine_cfg, run_throughput, runtime};
-use kvswap::config::PrefetchConfig;
+use kvswap::config::{FaultConfig, PrefetchConfig};
 use kvswap::coordinator::Policy;
 use kvswap::disk::DiskProfile;
 use kvswap::metrics::{Phase, Table};
@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         ("kvswap wo/reu", Policy::KvSwap, false),
         ("kvswap sync-io", Policy::KvSwap, true),
         ("kvswap", Policy::KvSwap, true),
+        ("kvswap 5%fault", Policy::KvSwap, true),
     ];
     let mut t = Table::new(&["method", "io_wait", "attn", "predict", "gather", "reuse_mgmt", "total/block"]);
     for (name, policy, reuse) in roster {
@@ -57,7 +58,27 @@ fn main() -> anyhow::Result<()> {
             // read charges the decode loop in full
             cfg.prefetch = PrefetchConfig::synchronous();
         }
+        let faulty = name == "kvswap 5%fault";
+        if faulty {
+            // ablation: 5% transient read faults + 2% silent bit flips —
+            // latency under the retry/checksum recovery machinery
+            cfg.fault = FaultConfig {
+                rate: 0.05,
+                corruption_rate: 0.02,
+                seed: 7,
+                persistent: false,
+            };
+        }
         let (stats, _) = run_throughput(rt.clone(), cfg, context - 64, 1, steps)?;
+        if faulty {
+            println!(
+                "  [5%fault recovery: {} retries, {} corrupt extents detected, \
+                 {} degraded layer-steps]",
+                stats.prefetch.io_retries,
+                stats.prefetch.corrupt_detected,
+                stats.degraded_steps
+            );
+        }
         let per_block = |ph: Phase| stats.breakdown.per_step_ms(ph) / layers;
         let total = [
             Phase::IoWait,

@@ -272,6 +272,134 @@ impl PrefetchConfig {
     }
 }
 
+/// Fault-injection knobs for the `disk::FaultBackend` wrapper. Off by
+/// default (`rate == corruption_rate == 0.0` ⇒ the backend is never
+/// wrapped). Fully deterministic for a given `seed` and op sequence, so
+/// fault runs are reproducible and bit-identity vs. the clean run can be
+/// asserted in tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-read probability of an injected I/O fault (transient error,
+    /// latency spike, or short read — or a persistent extent poison when
+    /// `persistent` is set).
+    pub rate: f64,
+    /// Per-read probability of a *silent* bit flip in the returned bytes
+    /// (caught only by the integrity checksums).
+    pub corruption_rate: f64,
+    /// PRNG seed for the probabilistic injector.
+    pub seed: u64,
+    /// When true, injected I/O faults poison the extent: every later read
+    /// of overlapping bytes fails too, until `FaultBackend::heal()`.
+    pub persistent: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            rate: 0.0,
+            corruption_rate: 0.0,
+            seed: 0,
+            persistent: false,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any injection is configured (decides backend wrapping).
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0 || self.corruption_rate > 0.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("rate", self.rate.into()),
+            ("corruption_rate", self.corruption_rate.into()),
+            ("seed", (self.seed as usize).into()),
+            ("persistent", self.persistent.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> FaultConfig {
+        let d = FaultConfig::default();
+        FaultConfig {
+            rate: j.f64_or("rate", d.rate),
+            corruption_rate: j.f64_or("corruption_rate", d.corruption_rate),
+            seed: j.usize_or("seed", d.seed as usize) as u64,
+            persistent: j
+                .get("persistent")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.persistent),
+        }
+    }
+}
+
+/// Retry and circuit-breaker policy for the staging read path. Defaults
+/// keep the clean path untouched (retries only run after a failure) while
+/// absorbing transient faults: 3 re-issues with 1→50 ms jittered
+/// exponential backoff, breaker trips after 4 consecutive threaded plan
+/// failures, half-open probe after 8 clean synchronous plans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryConfig {
+    /// Max re-issues per preload plan (0 disables retrying).
+    pub max_retries: u32,
+    /// First backoff sleep, in milliseconds.
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling, in milliseconds.
+    pub backoff_max_ms: f64,
+    /// Jitter fraction in [0,1]: each sleep is scaled by a uniform factor
+    /// in [1-jitter, 1] to de-synchronize retry storms.
+    pub jitter: f64,
+    /// Consecutive threaded plan failures before the breaker opens and
+    /// routes plans through the synchronous inline path.
+    pub breaker_threshold: u32,
+    /// Clean synchronous plans required (while open) before a half-open
+    /// probe plan is sent back through the worker pool.
+    pub breaker_probe_after: u32,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            max_retries: 3,
+            backoff_base_ms: 1.0,
+            backoff_max_ms: 50.0,
+            jitter: 0.5,
+            breaker_threshold: 4,
+            breaker_probe_after: 8,
+        }
+    }
+}
+
+impl RetryConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("max_retries", (self.max_retries as usize).into()),
+            ("backoff_base_ms", self.backoff_base_ms.into()),
+            ("backoff_max_ms", self.backoff_max_ms.into()),
+            ("jitter", self.jitter.into()),
+            ("breaker_threshold", (self.breaker_threshold as usize).into()),
+            (
+                "breaker_probe_after",
+                (self.breaker_probe_after as usize).into(),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> RetryConfig {
+        let d = RetryConfig::default();
+        RetryConfig {
+            max_retries: j.usize_or("max_retries", d.max_retries as usize) as u32,
+            backoff_base_ms: j.f64_or("backoff_base_ms", d.backoff_base_ms),
+            backoff_max_ms: j.f64_or("backoff_max_ms", d.backoff_max_ms),
+            jitter: j.f64_or("jitter", d.jitter),
+            breaker_threshold: j.usize_or("breaker_threshold", d.breaker_threshold as usize)
+                as u32,
+            breaker_probe_after: j.usize_or("breaker_probe_after", d.breaker_probe_after as usize)
+                as u32,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,5 +493,35 @@ mod tests {
         };
         let back = PrefetchConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn fault_config_roundtrip_and_enabled() {
+        let d = FaultConfig::default();
+        assert!(!d.enabled(), "faults must be off by default");
+        let c = FaultConfig {
+            rate: 0.05,
+            corruption_rate: 0.01,
+            seed: 7,
+            persistent: true,
+        };
+        assert!(c.enabled());
+        let back = FaultConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn retry_config_roundtrip() {
+        let c = RetryConfig {
+            max_retries: 5,
+            backoff_base_ms: 2.0,
+            backoff_max_ms: 80.0,
+            jitter: 0.25,
+            breaker_threshold: 3,
+            breaker_probe_after: 6,
+        };
+        let back = RetryConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
+        assert_eq!(back, c);
+        assert!(RetryConfig::default().breaker_threshold >= 1);
     }
 }

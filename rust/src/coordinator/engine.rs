@@ -33,9 +33,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::policy::Policy;
-use crate::config::{KvSwapConfig, ModelSpec, PrefetchConfig};
+use crate::config::{FaultConfig, KvSwapConfig, ModelSpec, PrefetchConfig, RetryConfig};
 use crate::disk::{
-    DiskProfile, PlannedExtent, Prefetcher, PreloadPlan, SimDisk, StorageBackend,
+    Backend, DiskProfile, FaultBackend, PlannedExtent, Prefetcher, PreloadPlan, RetryPolicy,
+    SimDisk, StorageBackend,
 };
 use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
 use crate::metrics::{Breakdown, DecodeStats, Phase};
@@ -59,6 +60,11 @@ pub struct EngineConfig {
     pub storage: StorageBackend,
     /// Prefetch-pipeline shape (workers / queue depth / coalescing gap).
     pub prefetch: PrefetchConfig,
+    /// Fault injection on the storage read path (disabled by default;
+    /// non-zero rates wrap the backend in a [`FaultBackend`]).
+    pub fault: FaultConfig,
+    /// Retry/backoff + circuit-breaker policy for staging reads.
+    pub retry: RetryConfig,
     /// true: SimDisk sleeps (scaled); false: virtual-clock accounting.
     pub real_time: bool,
     pub time_scale: f64,
@@ -77,6 +83,8 @@ impl Default for EngineConfig {
             disk: DiskProfile::nvme(),
             storage: StorageBackend::Mem,
             prefetch: PrefetchConfig::default(),
+            fault: FaultConfig::default(),
+            retry: RetryConfig::default(),
             real_time: false,
             time_scale: 1.0,
             max_context: 2048,
@@ -138,6 +146,16 @@ impl EngineConfigBuilder {
         self
     }
 
+    pub fn fault(mut self, fault: FaultConfig) -> Self {
+        self.cfg.fault = fault;
+        self
+    }
+
+    pub fn retry(mut self, retry: RetryConfig) -> Self {
+        self.cfg.retry = retry;
+        self
+    }
+
     pub fn real_time(mut self, real_time: bool) -> Self {
         self.cfg.real_time = real_time;
         self
@@ -173,6 +191,34 @@ impl EngineConfigBuilder {
         anyhow::ensure!(
             c.time_scale >= 0.0 && c.time_scale.is_finite(),
             "time_scale must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&c.fault.rate) && c.fault.rate.is_finite(),
+            "fault.rate must be a probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&c.fault.corruption_rate) && c.fault.corruption_rate.is_finite(),
+            "fault.corruption_rate must be a probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&c.retry.jitter) && c.retry.jitter.is_finite(),
+            "retry.jitter must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            c.retry.backoff_base_ms >= 0.0 && c.retry.backoff_base_ms.is_finite(),
+            "retry.backoff_base_ms must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            c.retry.backoff_max_ms >= c.retry.backoff_base_ms && c.retry.backoff_max_ms.is_finite(),
+            "retry.backoff_max_ms must be finite and >= backoff_base_ms"
+        );
+        anyhow::ensure!(
+            c.retry.breaker_threshold >= 1,
+            "retry.breaker_threshold must be >= 1"
+        );
+        anyhow::ensure!(
+            c.retry.breaker_probe_after >= 1,
+            "retry.breaker_probe_after must be >= 1"
         );
         let needed = c.kv.selected_entries() + c.kv.rb_slots;
         anyhow::ensure!(
@@ -238,6 +284,9 @@ pub struct Engine {
     decode_t0: Option<f64>,
     tokens_generated: u64,
     steps_done: u64,
+    /// Layer-awaits that fell back to resident-only attention after an
+    /// unrecoverable staged load (degradation rung 4).
+    degraded: u64,
 }
 
 impl Engine {
@@ -332,10 +381,19 @@ impl Engine {
         };
         let pacing = if cfg.real_time { Some(clock.clone()) } else { None };
         let backend = cfg.storage.open()?;
+        let backend: Arc<dyn Backend> = if cfg.fault.enabled() {
+            Arc::new(FaultBackend::new(backend, cfg.fault.clone()))
+        } else {
+            backend
+        };
         let disk = Arc::new(SimDisk::new(cfg.disk.clone(), backend, pacing));
         // the prefetch workers share only the SimDisk (Backend + stats);
         // everything runtime-bound stays on this thread
-        let prefetcher = Prefetcher::spawn(disk.clone(), &cfg.prefetch);
+        let prefetcher = Prefetcher::spawn_with(
+            disk.clone(),
+            &cfg.prefetch,
+            RetryPolicy::new(cfg.retry.clone()),
+        );
 
         let sel_entries = cfg.kv.selected_entries();
         let sel_region = (sel_entries / g_layout) * g_layout;
@@ -425,6 +483,7 @@ impl Engine {
             decode_t0: None,
             tokens_generated: 0,
             steps_done: 0,
+            degraded: 0,
         })
     }
 
@@ -678,6 +737,7 @@ impl Engine {
         self.warmup()?;
         self.disk.stats().reset();
         self.prefetcher.reset_counters();
+        self.degraded = 0;
         self.breakdown = Breakdown::default();
         self.decode_t0 = Some(self.clock.now_secs());
         let mut xs = Vec::new();
@@ -734,6 +794,7 @@ impl Engine {
                 bytes_loaded: snap.logical_read_bytes,
                 mean_overlap: self.mean_overlap(),
                 prefetch: self.prefetcher.summary(),
+                degraded_steps: self.degraded,
             },
             xs,
             token_hist,
@@ -1039,7 +1100,24 @@ impl Engine {
     /// *residual* wait — the portion of device time compute did not hide.
     fn await_loads(&mut self, layer: usize) -> anyhow::Result<()> {
         let wait_t = Instant::now();
-        let staged = self.prefetcher.recv()?;
+        let staged = match self.prefetcher.recv() {
+            Ok(staged) => staged,
+            // rung 4 of the degradation ladder: the load failed past
+            // every retry — run this layer's attention over what is
+            // already resident (reuse buffer + rolling tail) instead of
+            // aborting the decode, and record the degraded step
+            Err(e) if e.is_retryable() => {
+                crate::log_debug!("layer {layer} staging failed ({e}); degrading");
+                self.degrade_layer(layer);
+                if self.cfg.real_time {
+                    self.breakdown.add(Phase::IoWait, wait_t.elapsed());
+                }
+                return Ok(());
+            }
+            // OutOfBounds / QueueClosed are logic or shutdown errors —
+            // degrading would hide a real bug
+            Err(e) => return Err(e.into()),
+        };
         anyhow::ensure!(staged.layer == layer, "prefetch pipeline out of order");
         if layer == 0 {
             self.l0_inflight = false;
@@ -1118,6 +1196,26 @@ impl Engine {
         }
         self.charge(Phase::ReuseMgmt, t.elapsed());
         Ok(())
+    }
+
+    /// Fall back to resident-only attention for `layer` after its staged
+    /// load was lost: drop the (never-arrived) staging and shrink the
+    /// selection to groups the reuse buffer already holds, so `assemble`
+    /// never reaches for bytes that did not arrive. The rolling tail —
+    /// the most recent tokens — is always resident, so the step stays
+    /// causal; it just attends over a smaller critical set.
+    fn degrade_layer(&mut self, layer: usize) {
+        self.degraded += 1;
+        if layer == 0 {
+            self.l0_inflight = false;
+        }
+        for su in &mut self.seqs {
+            su.staging[layer].clear();
+            let reuse = &su.kv.layers[layer].reuse;
+            let mut sel = std::mem::take(&mut su.pending_sel[layer]);
+            sel.retain(|gid| reuse.get(*gid).is_some());
+            su.pending_sel[layer] = sel;
+        }
     }
 
     // -----------------------------------------------------------------
@@ -1382,6 +1480,57 @@ mod tests {
             ..KvSwapConfig::default()
         };
         assert!(EngineConfig::builder().kv(kv).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bad_fault_and_retry_knobs() {
+        let f = FaultConfig {
+            rate: 1.5,
+            ..FaultConfig::default()
+        };
+        assert!(EngineConfig::builder().fault(f).build().is_err());
+        let f = FaultConfig {
+            corruption_rate: -0.1,
+            ..FaultConfig::default()
+        };
+        assert!(EngineConfig::builder().fault(f).build().is_err());
+        let r = RetryConfig {
+            jitter: 2.0,
+            ..RetryConfig::default()
+        };
+        assert!(EngineConfig::builder().retry(r).build().is_err());
+        let r = RetryConfig {
+            backoff_base_ms: 10.0,
+            backoff_max_ms: 1.0,
+            ..RetryConfig::default()
+        };
+        assert!(EngineConfig::builder().retry(r).build().is_err());
+        let r = RetryConfig {
+            breaker_threshold: 0,
+            ..RetryConfig::default()
+        };
+        assert!(EngineConfig::builder().retry(r).build().is_err());
+        let r = RetryConfig {
+            breaker_probe_after: 0,
+            ..RetryConfig::default()
+        };
+        assert!(EngineConfig::builder().retry(r).build().is_err());
+        // a sound fault matrix passes and flips `enabled()`
+        let cfg = EngineConfig::builder()
+            .fault(FaultConfig {
+                rate: 0.05,
+                seed: 7,
+                ..FaultConfig::default()
+            })
+            .retry(RetryConfig {
+                max_retries: 5,
+                ..RetryConfig::default()
+            })
+            .build()
+            .unwrap();
+        assert!(cfg.fault.enabled());
+        assert_eq!(cfg.retry.max_retries, 5);
+        assert!(!EngineConfig::default().fault.enabled());
     }
 
     #[test]

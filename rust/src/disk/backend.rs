@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use super::error::{DiskError, DiskResult};
+use super::relock;
 
 /// One pending read: `buf.len()` bytes at `offset`, filled in place.
 #[derive(Debug)]
@@ -143,12 +144,12 @@ impl Default for MemBackend {
 
 impl Backend for MemBackend {
     fn read_at(&self, offset: u64, buf: &mut [u8]) -> DiskResult<()> {
-        let data = self.data.lock().unwrap();
+        let data = relock(&self.data);
         Self::copy_range(&data, offset, buf)
     }
 
     fn write_at(&self, offset: u64, src: &[u8]) -> DiskResult<()> {
-        let mut data = self.data.lock().unwrap();
+        let mut data = relock(&self.data);
         let oob = || DiskError::OutOfBounds {
             offset,
             len: src.len(),
@@ -164,12 +165,12 @@ impl Backend for MemBackend {
     }
 
     fn len(&self) -> u64 {
-        self.data.lock().unwrap().len() as u64
+        relock(&self.data).len() as u64
     }
 
     /// One lock acquisition for the whole batch.
     fn read_batch(&self, reqs: &mut [ReadReq]) -> DiskResult<()> {
-        let data = self.data.lock().unwrap();
+        let data = relock(&self.data);
         for r in reqs.iter_mut() {
             Self::copy_range(&data, r.offset, &mut r.buf)?;
         }
@@ -217,13 +218,13 @@ impl Backend for FileBackend {
         self.file
             .write_all_at(data, offset)
             .map_err(|e| DiskError::io(e, offset, data.len()))?;
-        let mut len = self.len.lock().unwrap();
+        let mut len = relock(&self.len);
         *len = (*len).max(offset + data.len() as u64);
         Ok(())
     }
 
     fn len(&self) -> u64 {
-        *self.len.lock().unwrap()
+        *relock(&self.len)
     }
 
     /// Issue in ascending offset order: positional syscalls hit the page

@@ -35,6 +35,17 @@ pub enum DiskError {
     QueueClosed,
     /// A staged buffer did not arrive within the wait bound.
     Timeout { waited: Duration },
+    /// A staged extent failed its write-time checksum: the bytes on (or
+    /// coming back from) the device are not the bytes that were written.
+    Corrupt {
+        offset: u64,
+        len: usize,
+        expect: u64,
+        got: u64,
+    },
+    /// A prefetch worker panicked mid-plan; the panic was contained and
+    /// the plan is reported failed instead of unwinding the engine.
+    WorkerPanic { what: String },
 }
 
 impl DiskError {
@@ -45,6 +56,36 @@ impl DiskError {
             offset,
             len,
         }
+    }
+
+    /// Checksum-mismatch constructor used by the integrity layer.
+    pub fn corrupt(offset: u64, len: usize, expect: u64, got: u64) -> DiskError {
+        DiskError::Corrupt {
+            offset,
+            len,
+            expect,
+            got,
+        }
+    }
+
+    /// Whether a retry of the same operation can plausibly succeed.
+    ///
+    /// * `Io` — transient device errors (and injected faults) clear on
+    ///   re-issue; persistent ones exhaust the retry budget and surface.
+    /// * `Corrupt` — a re-read replaces the damaged staging bytes unless
+    ///   the medium itself lost the data.
+    /// * `Timeout` / `WorkerPanic` — the *plan* can be re-staged (e.g.
+    ///   synchronously after the circuit breaker trips).
+    /// * `OutOfBounds` / `QueueClosed` — logic errors or shutdown;
+    ///   retrying can never help.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            DiskError::Io { .. }
+                | DiskError::Corrupt { .. }
+                | DiskError::Timeout { .. }
+                | DiskError::WorkerPanic { .. }
+        )
     }
 }
 
@@ -63,6 +104,19 @@ impl fmt::Display for DiskError {
             DiskError::QueueClosed => write!(f, "prefetch queue closed"),
             DiskError::Timeout { waited } => {
                 write!(f, "staged buffer not ready after {waited:?}")
+            }
+            DiskError::Corrupt {
+                offset,
+                len,
+                expect,
+                got,
+            } => write!(
+                f,
+                "checksum mismatch at offset {offset} (len {len}): \
+                 expected {expect:#018x}, got {got:#018x}"
+            ),
+            DiskError::WorkerPanic { what } => {
+                write!(f, "prefetch worker panicked: {what}")
             }
         }
     }
@@ -113,6 +167,35 @@ mod tests {
             .filter(|e| matches!(e, DiskError::Timeout { .. }))
             .count();
         assert_eq!(retryable, 1);
+    }
+
+    #[test]
+    fn retryable_classification_drives_recovery() {
+        assert!(DiskError::io(std::io::Error::other("transient"), 0, 8).is_retryable());
+        assert!(DiskError::corrupt(64, 32, 1, 2).is_retryable());
+        assert!(DiskError::Timeout {
+            waited: Duration::from_millis(5)
+        }
+        .is_retryable());
+        assert!(DiskError::WorkerPanic {
+            what: "boom".into()
+        }
+        .is_retryable());
+        // logic errors and shutdown must never be retried
+        assert!(!DiskError::OutOfBounds {
+            offset: 9,
+            len: 9,
+            size: 1
+        }
+        .is_retryable());
+        assert!(!DiskError::QueueClosed.is_retryable());
+    }
+
+    #[test]
+    fn corrupt_display_names_both_checksums() {
+        let e = DiskError::corrupt(4096, 128, 0xdead, 0xbeef);
+        let s = e.to_string();
+        assert!(s.contains("4096") && s.contains("dead") && s.contains("beef"), "{s}");
     }
 
     #[test]

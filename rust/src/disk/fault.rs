@@ -1,0 +1,372 @@
+//! Deterministic fault injection around any [`Backend`].
+//!
+//! `FaultBackend` wraps an inner backend and perturbs its *read* path —
+//! writes always pass through untouched, so the stored image (and the
+//! write-time checksums stamped above it) stays truthful. Two injection
+//! channels compose:
+//!
+//! * **Scripted**: [`FaultBackend::script_at`] pins an exact fault to the
+//!   N-th read op, for tests that need a failure at a precise point.
+//! * **Probabilistic**: per-read Bernoulli draws from a seeded PRNG
+//!   ([`FaultConfig`]`{rate, corruption_rate, seed}`), so a "5% flaky
+//!   disk" run is reproducible bit-for-bit.
+//!
+//! Injected faults mirror how real storage misbehaves:
+//!
+//! * transient `Io` errors that clear on re-issue,
+//! * *persistent* extent poison ([`FaultBackend::poison`], or every
+//!   probabilistic fault when `persistent` is set) that keeps failing
+//!   until [`FaultBackend::heal`],
+//! * latency spikes (the read succeeds, late),
+//! * short reads surfacing as `UnexpectedEof`,
+//! * **silent bit flips** — the read *succeeds* with one wrong bit; only
+//!   the integrity checksums can catch these.
+//!
+//! `read_batch` deliberately degrades to per-request `read_at` so every
+//! extent gets an independent fault draw; batched-submission timing is
+//! modeled above this layer by `SimDisk`, not here.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::backend::Backend;
+use super::error::{DiskError, DiskResult};
+use super::relock;
+use crate::config::FaultConfig;
+use crate::util::rng::Rng;
+
+/// One injected failure mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Fail this read with an `Io` error; the next attempt is clean.
+    TransientIo,
+    /// Fail this read and poison its extent: all later overlapping reads
+    /// fail too, until `heal()`.
+    PersistentIo,
+    /// Delay the read by the given wall-clock duration, then succeed.
+    LatencySpike(Duration),
+    /// Return `UnexpectedEof` as a device short-read would.
+    ShortRead,
+    /// Succeed but flip one bit of the returned buffer (silent).
+    BitFlip,
+    /// Panic inside the read — exercises worker supervision.
+    Panic,
+}
+
+/// Injection counters, snapshotted for assertions.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    pub reads: u64,
+    pub injected_io: u64,
+    pub injected_latency: u64,
+    pub injected_short: u64,
+    pub injected_flips: u64,
+    pub injected_panics: u64,
+}
+
+impl FaultSnapshot {
+    pub fn total_injected(&self) -> u64 {
+        self.injected_io
+            + self.injected_latency
+            + self.injected_short
+            + self.injected_flips
+            + self.injected_panics
+    }
+}
+
+fn injected_io_error(offset: u64, len: usize, what: &str) -> DiskError {
+    DiskError::io(
+        std::io::Error::other(format!("injected fault: {what}")),
+        offset,
+        len,
+    )
+}
+
+/// The wrapper. `Send + Sync` like any backend; all mutable state is
+/// behind atomics/mutexes and no lock is held across the inner I/O call
+/// (or across an injected panic).
+pub struct FaultBackend {
+    inner: Arc<dyn Backend>,
+    cfg: FaultConfig,
+    rng: Mutex<Rng>,
+    ops: AtomicU64,
+    script: Mutex<HashMap<u64, Fault>>,
+    /// Poisoned (offset, len) extents; small, scanned linearly.
+    poisoned: Mutex<Vec<(u64, u64)>>,
+    n_io: AtomicU64,
+    n_latency: AtomicU64,
+    n_short: AtomicU64,
+    n_flips: AtomicU64,
+    n_panics: AtomicU64,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Arc<dyn Backend>, cfg: FaultConfig) -> FaultBackend {
+        FaultBackend {
+            rng: Mutex::new(Rng::new(cfg.seed)),
+            inner,
+            cfg,
+            ops: AtomicU64::new(0),
+            script: Mutex::new(HashMap::new()),
+            poisoned: Mutex::new(Vec::new()),
+            n_io: AtomicU64::new(0),
+            n_latency: AtomicU64::new(0),
+            n_short: AtomicU64::new(0),
+            n_flips: AtomicU64::new(0),
+            n_panics: AtomicU64::new(0),
+        }
+    }
+
+    /// Wrap with injection disabled; faults come only from `script_at`
+    /// and `poison`.
+    pub fn quiet(inner: Arc<dyn Backend>) -> FaultBackend {
+        FaultBackend::new(inner, FaultConfig::default())
+    }
+
+    /// Pin `fault` to the read op with index `op` (0-based, counted
+    /// across all reads). Scripted faults win over probabilistic draws.
+    pub fn script_at(&self, op: u64, fault: Fault) {
+        relock(&self.script).insert(op, fault);
+    }
+
+    /// Persistently poison `[offset, offset+len)`.
+    pub fn poison(&self, offset: u64, len: u64) {
+        relock(&self.poisoned).push((offset, len));
+    }
+
+    /// Clear all persistent poison and pending scripted faults — the
+    /// "device recovered" transition for breaker-recovery tests.
+    pub fn heal(&self) {
+        relock(&self.poisoned).clear();
+        relock(&self.script).clear();
+    }
+
+    pub fn snapshot(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            reads: self.ops.load(Ordering::Relaxed),
+            injected_io: self.n_io.load(Ordering::Relaxed),
+            injected_latency: self.n_latency.load(Ordering::Relaxed),
+            injected_short: self.n_short.load(Ordering::Relaxed),
+            injected_flips: self.n_flips.load(Ordering::Relaxed),
+            injected_panics: self.n_panics.load(Ordering::Relaxed),
+        }
+    }
+
+    fn poisoned_overlap(&self, offset: u64, len: usize) -> bool {
+        let end = offset.saturating_add(len as u64);
+        relock(&self.poisoned)
+            .iter()
+            .any(|&(o, l)| o < end && o.saturating_add(l) > offset)
+    }
+
+    /// Probabilistic draw for one read. Order matters: an I/O-level fault
+    /// preempts a silent flip (a failed read returns no bytes to flip).
+    fn draw(&self) -> Option<Fault> {
+        if !self.cfg.enabled() {
+            return None;
+        }
+        let mut rng = relock(&self.rng);
+        if self.cfg.rate > 0.0 && rng.chance(self.cfg.rate) {
+            if self.cfg.persistent {
+                return Some(Fault::PersistentIo);
+            }
+            return Some(match rng.below(4) {
+                0 | 1 => Fault::TransientIo,
+                2 => Fault::LatencySpike(Duration::from_micros(200)),
+                _ => Fault::ShortRead,
+            });
+        }
+        if self.cfg.corruption_rate > 0.0 && rng.chance(self.cfg.corruption_rate) {
+            return Some(Fault::BitFlip);
+        }
+        None
+    }
+
+    fn flip_position(&self, len: usize) -> (usize, u8) {
+        let mut rng = relock(&self.rng);
+        (rng.below(len.max(1)), 1u8 << rng.below(8))
+    }
+}
+
+impl Backend for FaultBackend {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> DiskResult<()> {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        if self.poisoned_overlap(offset, buf.len()) {
+            self.n_io.fetch_add(1, Ordering::Relaxed);
+            return Err(injected_io_error(offset, buf.len(), "poisoned extent"));
+        }
+        let fault = relock(&self.script).remove(&op).or_else(|| self.draw());
+        match fault {
+            None => self.inner.read_at(offset, buf),
+            Some(Fault::TransientIo) => {
+                self.n_io.fetch_add(1, Ordering::Relaxed);
+                Err(injected_io_error(offset, buf.len(), "transient EIO"))
+            }
+            Some(Fault::PersistentIo) => {
+                self.n_io.fetch_add(1, Ordering::Relaxed);
+                self.poison(offset, buf.len() as u64);
+                Err(injected_io_error(offset, buf.len(), "persistent EIO"))
+            }
+            Some(Fault::LatencySpike(d)) => {
+                self.n_latency.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(d);
+                self.inner.read_at(offset, buf)
+            }
+            Some(Fault::ShortRead) => {
+                self.n_short.fetch_add(1, Ordering::Relaxed);
+                // partially fill the buffer like a real short read would
+                let half = buf.len() / 2;
+                let _ = self.inner.read_at(offset, &mut buf[..half]);
+                Err(DiskError::io(
+                    std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "injected fault: short read",
+                    ),
+                    offset,
+                    buf.len(),
+                ))
+            }
+            Some(Fault::BitFlip) => {
+                self.inner.read_at(offset, buf)?;
+                if !buf.is_empty() {
+                    self.n_flips.fetch_add(1, Ordering::Relaxed);
+                    let (i, mask) = self.flip_position(buf.len());
+                    buf[i] ^= mask;
+                }
+                Ok(())
+            }
+            Some(Fault::Panic) => {
+                self.n_panics.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: backend panic at read op {op}");
+            }
+        }
+    }
+
+    fn write_at(&self, offset: u64, data: &[u8]) -> DiskResult<()> {
+        // the write path is trusted: faults target reads, and keeping the
+        // stored image truthful lets tests assert bit-identity end-to-end
+        self.inner.write_at(offset, data)
+    }
+
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    // default read_batch would coalesce the fault draws; go per-extent
+    fn read_batch(&self, reqs: &mut [super::backend::ReadReq]) -> DiskResult<()> {
+        for req in reqs.iter_mut() {
+            let offset = req.offset;
+            self.read_at(offset, &mut req.buf)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disk::MemBackend;
+
+    fn image(n: usize) -> (Arc<MemBackend>, Vec<u8>) {
+        let data: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
+        let b = Arc::new(MemBackend::new());
+        b.write_at(0, &data).unwrap();
+        (b, data)
+    }
+
+    #[test]
+    fn quiet_wrapper_is_transparent() {
+        let (inner, data) = image(1024);
+        let fb = FaultBackend::quiet(inner);
+        let mut buf = vec![0u8; 256];
+        fb.read_at(128, &mut buf).unwrap();
+        assert_eq!(buf, &data[128..384]);
+        assert_eq!(fb.len(), 1024);
+        assert_eq!(fb.snapshot().total_injected(), 0);
+    }
+
+    #[test]
+    fn scripted_faults_fire_at_exact_ops() {
+        let (inner, data) = image(512);
+        let fb = FaultBackend::quiet(inner);
+        fb.script_at(1, Fault::TransientIo);
+        fb.script_at(2, Fault::BitFlip);
+        let mut buf = vec![0u8; 64];
+        fb.read_at(0, &mut buf).unwrap(); // op 0: clean
+        assert!(matches!(
+            fb.read_at(0, &mut buf), // op 1: scripted EIO
+            Err(DiskError::Io { .. })
+        ));
+        fb.read_at(0, &mut buf).unwrap(); // op 2: silent flip
+        assert_ne!(buf, &data[..64], "bit flip must corrupt the buffer");
+        let delta: u32 = buf
+            .iter()
+            .zip(&data[..64])
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(delta, 1, "exactly one flipped bit");
+        fb.read_at(0, &mut buf).unwrap(); // op 3: clean again
+        assert_eq!(buf, &data[..64]);
+        let s = fb.snapshot();
+        assert_eq!((s.injected_io, s.injected_flips, s.reads), (1, 1, 4));
+    }
+
+    #[test]
+    fn probabilistic_injection_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let (inner, _) = image(4096);
+            let fb = FaultBackend::new(
+                inner,
+                FaultConfig {
+                    rate: 0.3,
+                    corruption_rate: 0.0,
+                    seed,
+                    persistent: false,
+                },
+            );
+            let mut buf = vec![0u8; 32];
+            (0..64).map(|_| fb.read_at(0, &mut buf).is_err()).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed, same fault sequence");
+        assert_ne!(run(7), run(8), "different seed, different sequence");
+        assert!(run(7).iter().any(|&e| e), "30% rate must inject something");
+        assert!(!run(7).iter().all(|&e| e), "…but not fail everything");
+    }
+
+    #[test]
+    fn poison_persists_until_heal() {
+        let (inner, data) = image(1024);
+        let fb = FaultBackend::quiet(inner);
+        fb.poison(256, 128);
+        let mut buf = vec![0u8; 64];
+        fb.read_at(0, &mut buf).unwrap(); // disjoint: fine
+        for _ in 0..3 {
+            assert!(fb.read_at(300, &mut buf).is_err(), "overlap keeps failing");
+        }
+        assert!(fb.read_at(250, &mut buf).is_err(), "straddling start fails");
+        fb.heal();
+        fb.read_at(300, &mut buf).unwrap();
+        assert_eq!(buf, &data[300..364]);
+    }
+
+    #[test]
+    fn persistent_mode_converts_hits_into_poison() {
+        let (inner, _) = image(4096);
+        let fb = FaultBackend::new(
+            inner,
+            FaultConfig {
+                rate: 1.0,
+                corruption_rate: 0.0,
+                seed: 1,
+                persistent: true,
+            },
+        );
+        let mut buf = vec![0u8; 64];
+        assert!(fb.read_at(64, &mut buf).is_err()); // draws + poisons
+        fb.heal();
+        // rate 1.0 still draws a fresh persistent fault post-heal
+        assert!(fb.read_at(64, &mut buf).is_err());
+    }
+}

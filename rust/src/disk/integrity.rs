@@ -1,0 +1,179 @@
+//! Write-time checksums for disk-resident KV extents.
+//!
+//! Flash and file systems can return *wrong bytes* without returning an
+//! error — a bit flip in a group record silently corrupts attention for
+//! every later step that reuses it. The fix is end-to-end: [`SimDisk`]
+//! stamps an FNV-1a checksum for every extent it writes into an
+//! [`IntegrityMap`], and the staging path re-hashes the bytes it read
+//! back. A mismatch surfaces as the typed, retryable
+//! [`DiskError::Corrupt`](super::DiskError::Corrupt) so the coalesced
+//! read path can re-issue the run instead of feeding garbage to the
+//! kernels.
+//!
+//! Verification is *exact-extent*: only a read whose `(offset, len)`
+//! matches a stamped write is checked. Reads that slice a record
+//! differently (FlexGen's whole-layer extents, ShadowKv's V-half reads)
+//! are unverifiable by construction and pass through unchecked — the
+//! KVSwap group reads, which dominate the hot path, always match.
+//!
+//! [`SimDisk`]: super::SimDisk
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::error::{DiskError, DiskResult};
+use super::relock;
+
+/// 64-bit FNV-1a: tiny, dependency-free, and byte-order independent.
+/// Not cryptographic — the adversary here is a flipped bit, not an
+/// attacker — and fast enough to stamp on every group flush.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct Stamps {
+    /// offset → (len, checksum) of the most recent write at that offset.
+    by_offset: BTreeMap<u64, (usize, u64)>,
+    /// Largest stamped extent length, bounding the overlap scan below.
+    max_len: u64,
+}
+
+/// Checksum registry for one backing store. Shared between the write
+/// path (stamping) and the staging path (verification); a plain mutex is
+/// fine because both sides touch it once per multi-kilobyte extent.
+#[derive(Default)]
+pub struct IntegrityMap {
+    inner: Mutex<Stamps>,
+}
+
+impl IntegrityMap {
+    pub fn new() -> IntegrityMap {
+        IntegrityMap::default()
+    }
+
+    /// Record the checksum of `data` as the truth for extent
+    /// `(offset, data.len())`, invalidating any previously stamped extent
+    /// it overlaps (a partial overwrite changes those bytes too).
+    pub fn stamp(&self, offset: u64, data: &[u8]) {
+        if data.is_empty() {
+            return;
+        }
+        let sum = fnv1a64(data);
+        let len = data.len() as u64;
+        let mut inner = relock(&self.inner);
+        // Any stamped extent starting within `max_len` before us may reach
+        // into [offset, offset+len); everything starting inside the write
+        // certainly overlaps.
+        let lo = offset.saturating_sub(inner.max_len);
+        let hi = offset.saturating_add(len);
+        let stale: Vec<u64> = inner
+            .by_offset
+            .range(lo..hi)
+            .filter(|&(&o, &(l, _))| o.saturating_add(l as u64) > offset && o != offset)
+            .map(|(&o, _)| o)
+            .collect();
+        for o in stale {
+            inner.by_offset.remove(&o);
+        }
+        inner.max_len = inner.max_len.max(len);
+        inner.by_offset.insert(offset, (data.len(), sum));
+    }
+
+    /// Verify `bytes` read back from `offset` against the stamped
+    /// checksum. Extents that were never stamped at exactly this
+    /// `(offset, len)` are unverifiable and pass.
+    pub fn verify(&self, offset: u64, bytes: &[u8]) -> DiskResult<()> {
+        let expect = {
+            let inner = relock(&self.inner);
+            match inner.by_offset.get(&offset) {
+                Some(&(len, sum)) if len == bytes.len() => sum,
+                _ => return Ok(()),
+            }
+        };
+        let got = fnv1a64(bytes);
+        if got == expect {
+            Ok(())
+        } else {
+            Err(DiskError::corrupt(offset, bytes.len(), expect, got))
+        }
+    }
+
+    /// Whether extent `(offset, len)` has a verifiable stamp.
+    pub fn is_stamped(&self, offset: u64, len: usize) -> bool {
+        let inner = relock(&self.inner);
+        matches!(inner.by_offset.get(&offset), Some(&(l, _)) if l == len)
+    }
+
+    /// Number of stamped extents (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        relock(&self.inner).by_offset.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn stamp_then_verify_roundtrip() {
+        let m = IntegrityMap::new();
+        let rec = vec![0xABu8; 256];
+        m.stamp(4096, &rec);
+        assert!(m.is_stamped(4096, 256));
+        m.verify(4096, &rec).unwrap();
+
+        // a single flipped bit is caught
+        let mut bad = rec.clone();
+        bad[17] ^= 0x40;
+        let err = m.verify(4096, &bad).unwrap_err();
+        assert!(matches!(err, DiskError::Corrupt { offset: 4096, len: 256, .. }));
+        assert!(err.is_retryable());
+    }
+
+    #[test]
+    fn unstamped_or_mismatched_extents_pass_unchecked() {
+        let m = IntegrityMap::new();
+        m.stamp(0, &[1u8; 64]);
+        // never written: unverifiable
+        m.verify(8192, &[9u8; 64]).unwrap();
+        // same offset, different length (e.g. a whole-layer read): skip
+        m.verify(0, &[9u8; 32]).unwrap();
+        assert!(!m.is_stamped(0, 32));
+    }
+
+    #[test]
+    fn overwrite_restamps_and_overlap_invalidates() {
+        let m = IntegrityMap::new();
+        m.stamp(100, &[1u8; 50]);
+        m.stamp(200, &[2u8; 50]);
+        // exact overwrite replaces the stamp
+        m.stamp(100, &[3u8; 50]);
+        m.verify(100, &[3u8; 50]).unwrap();
+        assert!(m.verify(100, &[1u8; 50]).is_err());
+        // a partial overwrite straddling extent 200 invalidates it
+        m.stamp(180, &[4u8; 40]);
+        assert!(!m.is_stamped(200, 50));
+        m.verify(200, &[0x5Au8; 50]).unwrap(); // now unverifiable, passes
+        // the straddling write itself is verifiable
+        assert!(m.is_stamped(180, 40));
+        assert_eq!(m.len(), 2); // offsets 100 and 180
+    }
+}

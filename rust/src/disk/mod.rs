@@ -19,21 +19,64 @@
 //!   "merge small reads into big ones" logic exists in exactly one place;
 //! * [`StorageBackend`] selects where bytes live (RAM, a real file, or a
 //!   caller-supplied backend) without the engine knowing the difference.
+//!
+//! ## Failure model & degradation ladder
+//!
+//! On-device storage is treated as *unreliable by design*: reads may fail
+//! transiently (`EIO`, short reads), stall (latency spikes), fail
+//! persistently (a bad extent), or — worst — succeed with wrong bytes.
+//! [`fault`] can inject every one of these deterministically for tests
+//! and benches. Recovery is layered, each rung strictly cheaper than the
+//! one below it:
+//!
+//! 1. **Detect** — every `SimDisk` write stamps an FNV-1a checksum
+//!    ([`integrity`]); staging re-verifies exact-extent reads, turning
+//!    silent corruption into a typed, retryable [`DiskError::Corrupt`].
+//! 2. **Retry** — the coalesced read path re-issues failed runs with
+//!    bounded exponential backoff + jitter under a per-plan budget
+//!    ([`retry`]), guided by [`DiskError::is_retryable`].
+//! 3. **Contain** — prefetch worker panics are caught and surfaced as
+//!    `DiskError::WorkerPanic`; dead workers are respawned; locks
+//!    recover from poisoning instead of cascading panics.
+//! 4. **Degrade** — past `breaker_threshold` consecutive threaded plan
+//!    failures a circuit breaker routes plans through the synchronous
+//!    `workers: 0` path (half-open probes recover once the device
+//!    heals); a plan that still fails makes the *engine* fall back to
+//!    attention over the resident critical cache for that layer and
+//!    counts a degraded step in the metrics instead of aborting.
+//!
+//! Only non-retryable errors (`OutOfBounds` logic bugs, `QueueClosed`
+//! shutdown) propagate out of the ladder.
 
 pub mod backend;
 pub mod coalesce;
 pub mod error;
+pub mod fault;
+pub mod integrity;
 pub mod prefetch;
 pub mod profile;
+pub mod retry;
 pub mod sim;
 pub mod stats;
 
 pub use backend::{Backend, FileBackend, MemBackend, ReadReq, StorageBackend};
 pub use coalesce::{coalesce, Run};
 pub use error::{DiskError, DiskResult};
+pub use fault::{Fault, FaultBackend, FaultSnapshot};
+pub use integrity::{fnv1a64, IntegrityMap};
 pub use prefetch::{
-    BufferPool, PlannedExtent, Prefetcher, PreloadPlan, PrefetchSummary, StagedLoad,
+    BreakerState, BufferPool, PlannedExtent, Prefetcher, PreloadPlan, PrefetchSummary, StagedLoad,
 };
 pub use profile::DiskProfile;
+pub use retry::{RetryBudget, RetryPolicy};
 pub use sim::SimDisk;
 pub use stats::{DiskSnapshot, DiskStats};
+
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+/// The disk layer's shared state (buffer pool, fault scripts, checksum
+/// stamps, backend images) stays valid across a worker panic — every
+/// mutation is complete-or-absent — so propagating the poison would only
+/// convert one contained failure into an engine-thread panic.
+pub(crate) fn relock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}

@@ -20,11 +20,30 @@
 //! reference for the integration tests — both modes run byte-for-byte the
 //! same reads, only the threading differs.
 //!
+//! ## Failure handling
+//!
+//! The pipeline assumes storage misbehaves (see [`super#failure-model--degradation-ladder`]):
+//!
+//! * staging reads retry failed runs under a per-plan [`RetryPolicy`]
+//!   budget and verify extent checksums before scattering bytes out;
+//! * a worker panic is caught, surfaced as `DiskError::WorkerPanic` for
+//!   *that plan only*, and the worker thread is recycled — `submit`
+//!   respawns finished workers;
+//! * a [`CircuitBreaker`] watches threaded plan outcomes: past
+//!   `breaker_threshold` consecutive failures it routes new plans through
+//!   the synchronous inline path (trading overlap for isolation from a
+//!   sick worker pool), and after `breaker_probe_after` clean inline
+//!   plans it sends a half-open probe back through the pool;
+//! * `shutdown` bounds its drain/join by a grace period and leaves the
+//!   pipeline returning `QueueClosed` instead of hanging on a wedged
+//!   worker; a `recv` timeout abandons only that ticket.
+//!
 //! The workers touch only [`Backend`](super::Backend) + staging memory;
 //! nothing device- or runtime-bound (`Rc<PjrtRuntime>` etc.) crosses a
 //! thread boundary.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -32,8 +51,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::ReadReq;
-use super::coalesce::coalesce;
+use super::coalesce::{coalesce, Run};
 use super::error::{DiskError, DiskResult};
+use super::relock;
+use super::retry::RetryPolicy;
 use super::sim::SimDisk;
 use crate::config::PrefetchConfig;
 
@@ -69,6 +90,8 @@ pub struct StagedLoad {
 }
 
 /// Recycled staging buffers, bounded so double-buffering stays bounded.
+/// Locks recover from poisoning: a panicking worker must not take the
+/// pool (and with it the engine thread) down with it.
 pub struct BufferPool {
     bufs: Mutex<Vec<Vec<u8>>>,
     max: usize,
@@ -83,12 +106,12 @@ impl BufferPool {
     }
 
     pub fn take(&self) -> Vec<u8> {
-        self.bufs.lock().unwrap().pop().unwrap_or_default()
+        relock(&self.bufs).pop().unwrap_or_default()
     }
 
     pub fn put(&self, mut buf: Vec<u8>) {
         buf.clear();
-        let mut bufs = self.bufs.lock().unwrap();
+        let mut bufs = relock(&self.bufs);
         if bufs.len() < self.max {
             bufs.push(buf);
         }
@@ -101,27 +124,45 @@ impl BufferPool {
 pub struct PrefetchCounters {
     plans_submitted: AtomicU64,
     plans_completed: AtomicU64,
+    plans_failed: AtomicU64,
     extents_requested: AtomicU64,
     runs_issued: AtomicU64,
     bytes_staged: AtomicU64,
+    io_retries: AtomicU64,
+    corrupt_detected: AtomicU64,
+    worker_panics: AtomicU64,
+    workers_restarted: AtomicU64,
+    breaker_trips: AtomicU64,
 }
 
 impl PrefetchCounters {
     pub fn summary(&self) -> PrefetchSummary {
         PrefetchSummary {
             plans: self.plans_completed.load(Ordering::Relaxed),
+            plans_failed: self.plans_failed.load(Ordering::Relaxed),
             extents: self.extents_requested.load(Ordering::Relaxed),
             runs: self.runs_issued.load(Ordering::Relaxed),
             bytes_staged: self.bytes_staged.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            corrupt_detected: self.corrupt_detected.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            workers_restarted: self.workers_restarted.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
         }
     }
 
     fn reset(&self) {
         self.plans_submitted.store(0, Ordering::Relaxed);
         self.plans_completed.store(0, Ordering::Relaxed);
+        self.plans_failed.store(0, Ordering::Relaxed);
         self.extents_requested.store(0, Ordering::Relaxed);
         self.runs_issued.store(0, Ordering::Relaxed);
         self.bytes_staged.store(0, Ordering::Relaxed);
+        self.io_retries.store(0, Ordering::Relaxed);
+        self.corrupt_detected.store(0, Ordering::Relaxed);
+        self.worker_panics.store(0, Ordering::Relaxed);
+        self.workers_restarted.store(0, Ordering::Relaxed);
+        self.breaker_trips.store(0, Ordering::Relaxed);
     }
 }
 
@@ -129,9 +170,22 @@ impl PrefetchCounters {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefetchSummary {
     pub plans: u64,
+    /// Plans that ultimately failed (retry budget exhausted / timeout /
+    /// contained worker panic) and were reported to the engine as errors.
+    pub plans_failed: u64,
     pub extents: u64,
     pub runs: u64,
     pub bytes_staged: u64,
+    /// Coalesced runs re-issued after a retryable failure.
+    pub io_retries: u64,
+    /// Checksum mismatches caught before bytes reached the engine.
+    pub corrupt_detected: u64,
+    /// Worker panics contained by the supervision layer.
+    pub worker_panics: u64,
+    /// Worker threads respawned after dying.
+    pub workers_restarted: u64,
+    /// Times the circuit breaker tripped the pipeline into sync routing.
+    pub breaker_trips: u64,
 }
 
 impl PrefetchSummary {
@@ -144,42 +198,171 @@ impl PrefetchSummary {
     }
 }
 
+/// Circuit-breaker state over the threaded pipeline (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: plans route through the worker pool.
+    Closed,
+    /// Tripped: plans route through the synchronous inline path.
+    Open,
+    /// One probe plan is in flight through the pool; everything else
+    /// stays inline until its verdict.
+    HalfOpen,
+}
+
+/// Consecutive-failure breaker with half-open probing. Not a separate
+/// thread — driven entirely by `submit` (routing) and `recv` (outcomes),
+/// so it adds no synchronization to the hot path.
+#[derive(Debug)]
+struct CircuitBreaker {
+    threshold: u32,
+    probe_after: u32,
+    state: BreakerState,
+    consecutive_failures: u32,
+    sync_successes: u32,
+    probe_ticket: Option<u64>,
+}
+
+impl CircuitBreaker {
+    fn new(threshold: u32, probe_after: u32) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            probe_after: probe_after.max(1),
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            sync_successes: 0,
+            probe_ticket: None,
+        }
+    }
+
+    fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Routing decision for a new ticket: `true` = worker pool.
+    fn route_threaded(&mut self, ticket: u64) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if self.sync_successes >= self.probe_after {
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_ticket = Some(ticket);
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    fn on_result(&mut self, ticket: u64, threaded: bool, ok: bool, counters: &PrefetchCounters) {
+        if ok {
+            match self.state {
+                BreakerState::HalfOpen if threaded && self.probe_ticket == Some(ticket) => {
+                    // probe survived: the pool is healthy again
+                    self.state = BreakerState::Closed;
+                    self.consecutive_failures = 0;
+                    self.sync_successes = 0;
+                    self.probe_ticket = None;
+                }
+                BreakerState::Closed if threaded => self.consecutive_failures = 0,
+                BreakerState::Open if !threaded => self.sync_successes += 1,
+                _ => {}
+            }
+        } else {
+            match self.state {
+                BreakerState::Closed => {
+                    if threaded {
+                        self.consecutive_failures += 1;
+                        if self.consecutive_failures >= self.threshold {
+                            self.state = BreakerState::Open;
+                            self.sync_successes = 0;
+                            counters.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                BreakerState::HalfOpen => {
+                    // probe (or a straggler) failed: stay away from the pool
+                    self.state = BreakerState::Open;
+                    self.sync_successes = 0;
+                    self.probe_ticket = None;
+                }
+                BreakerState::Open => self.sync_successes = 0,
+            }
+        }
+    }
+}
+
 type Job = (u64, PreloadPlan, Instant);
 type Completion = (u64, DiskResult<StagedLoad>);
 
-pub struct Prefetcher {
+/// Everything a staging call needs — shared by the engine thread (sync
+/// path) and every worker, and cheap to clone into respawned workers.
+#[derive(Clone)]
+struct StageCtx {
     disk: Arc<SimDisk>,
-    gap: u64,
     pool: Arc<BufferPool>,
     counters: Arc<PrefetchCounters>,
+    gap: u64,
+    retry: Arc<RetryPolicy>,
+}
+
+pub struct Prefetcher {
+    ctx: StageCtx,
     /// `None` ⇒ synchronous mode (reads run inline in `recv`).
     tx: Option<SyncSender<Job>>,
     done_rx: Option<Receiver<Completion>>,
+    /// Kept so `ensure_workers` can hand a sender to respawned workers;
+    /// dropped at shutdown so the completion drain can disconnect.
+    done_tx: Option<SyncSender<Completion>>,
+    job_rx: Option<Arc<Mutex<Receiver<Job>>>>,
     workers: Vec<JoinHandle<()>>,
+    breaker: CircuitBreaker,
+    /// ticket → routed-through-pool? (decided at submit, consumed at recv)
+    routes: BTreeMap<u64, bool>,
     next_ticket: u64,
     next_deliver: u64,
     reordered: BTreeMap<u64, DiskResult<StagedLoad>>,
     sync_queue: VecDeque<Job>,
     timeout: Duration,
+    grace: Duration,
+    closed: bool,
 }
 
 impl Prefetcher {
     pub fn spawn(disk: Arc<SimDisk>, cfg: &PrefetchConfig) -> Prefetcher {
-        let pool = Arc::new(BufferPool::new(2 * cfg.queue_depth.max(1)));
-        let counters = Arc::new(PrefetchCounters::default());
-        let mut p = Prefetcher {
+        Prefetcher::spawn_with(disk, cfg, RetryPolicy::default())
+    }
+
+    /// Spawn with an explicit retry/breaker policy (the engine builds the
+    /// policy from its validated `RetryConfig`).
+    pub fn spawn_with(disk: Arc<SimDisk>, cfg: &PrefetchConfig, retry: RetryPolicy) -> Prefetcher {
+        let rc = retry.config();
+        let breaker = CircuitBreaker::new(rc.breaker_threshold, rc.breaker_probe_after);
+        let ctx = StageCtx {
             disk,
+            pool: Arc::new(BufferPool::new(2 * cfg.queue_depth.max(1))),
+            counters: Arc::new(PrefetchCounters::default()),
             gap: cfg.coalesce_gap,
-            pool,
-            counters,
+            retry: Arc::new(retry),
+        };
+        let mut p = Prefetcher {
+            ctx,
             tx: None,
             done_rx: None,
+            done_tx: None,
+            job_rx: None,
             workers: Vec::new(),
+            breaker,
+            routes: BTreeMap::new(),
             next_ticket: 0,
             next_deliver: 0,
             reordered: BTreeMap::new(),
             sync_queue: VecDeque::new(),
             timeout: Duration::from_secs(60),
+            grace: Duration::from_secs(5),
+            closed: false,
         };
         if cfg.workers == 0 {
             return p;
@@ -188,32 +371,13 @@ impl Prefetcher {
         let (done_tx, done_rx) = sync_channel::<Completion>(cfg.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
         for w in 0..cfg.workers {
-            let job_rx = job_rx.clone();
-            let done_tx = done_tx.clone();
-            let disk = p.disk.clone();
-            let pool = p.pool.clone();
-            let counters = p.counters.clone();
-            let gap = p.gap;
-            let handle = std::thread::Builder::new()
-                .name(format!("kvswap-prefetch-{w}"))
-                .spawn(move || loop {
-                    let job = { job_rx.lock().unwrap().recv() };
-                    let Ok((ticket, plan, issued_at)) = job else {
-                        break;
-                    };
-                    let result = stage(&disk, &pool, &counters, gap, plan, issued_at);
-                    if done_tx.send((ticket, result)).is_err() {
-                        break;
-                    }
-                })
-                .expect("spawn prefetch worker");
-            p.workers.push(handle);
+            p.workers
+                .push(spawn_worker(w, job_rx.clone(), done_tx.clone(), p.ctx.clone()));
         }
-        // workers hold the only remaining done_tx clones, so done_rx
-        // disconnects exactly when the pool is gone
-        drop(done_tx);
         p.tx = Some(tx);
         p.done_rx = Some(done_rx);
+        p.done_tx = Some(done_tx);
+        p.job_rx = Some(job_rx);
         p
     }
 
@@ -221,36 +385,78 @@ impl Prefetcher {
         self.tx.is_none()
     }
 
-    /// Queue a plan. In threaded mode this blocks once `queue_depth`
-    /// plans are in flight (backpressure); in synchronous mode it only
-    /// enqueues and the read happens at `recv`.
-    pub fn submit(&mut self, plan: PreloadPlan) -> DiskResult<()> {
-        let ticket = self.next_ticket;
-        self.next_ticket += 1;
-        self.counters.plans_submitted.fetch_add(1, Ordering::Relaxed);
-        let job = (ticket, plan, Instant::now());
-        match &self.tx {
-            Some(tx) => tx.send(job).map_err(|_| DiskError::QueueClosed),
-            None => {
-                self.sync_queue.push_back(job);
-                Ok(())
-            }
-        }
+    /// Current breaker state (`Closed` = fully threaded routing).
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
     }
 
-    /// Receive the next staged load, in submission order.
+    /// Bound on how long `recv` waits for a staged load before abandoning
+    /// the ticket with `DiskError::Timeout`.
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Queue a plan. In threaded mode this blocks once `queue_depth`
+    /// plans are in flight (backpressure); in synchronous mode — or while
+    /// the breaker is open — it only enqueues and the read happens at
+    /// `recv`.
+    pub fn submit(&mut self, plan: PreloadPlan) -> DiskResult<()> {
+        if self.closed {
+            return Err(DiskError::QueueClosed);
+        }
+        let ticket = self.next_ticket;
+        let job = (ticket, plan, Instant::now());
+        let threaded = self.tx.is_some() && self.breaker.route_threaded(ticket);
+        if threaded {
+            self.ensure_workers();
+            let tx = self.tx.as_ref().expect("threaded route requires tx");
+            tx.send(job).map_err(|_| DiskError::QueueClosed)?;
+        } else {
+            self.sync_queue.push_back(job);
+        }
+        self.routes.insert(ticket, threaded);
+        self.next_ticket += 1;
+        self.ctx
+            .counters
+            .plans_submitted
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Receive the next staged load, in submission order. A plan whose
+    /// staging ultimately failed yields its typed error here; the ticket
+    /// is consumed either way, so later plans still deliver.
     pub fn recv(&mut self) -> DiskResult<StagedLoad> {
+        if self.closed {
+            return Err(DiskError::QueueClosed);
+        }
         if self.next_deliver == self.next_ticket {
             // nothing in flight: recv without a matching submit
             return Err(DiskError::QueueClosed);
         }
         let ticket = self.next_deliver;
-        if self.tx.is_none() {
-            let (t, plan, issued_at) = self.sync_queue.pop_front().ok_or(DiskError::QueueClosed)?;
-            debug_assert_eq!(t, ticket);
-            self.next_deliver += 1;
-            return stage(&self.disk, &self.pool, &self.counters, self.gap, plan, issued_at);
+        let threaded = self.routes.remove(&ticket).unwrap_or(self.tx.is_some());
+        let result = if threaded {
+            self.recv_threaded(ticket)
+        } else {
+            self.run_sync(ticket)
+        };
+        self.breaker
+            .on_result(ticket, threaded, result.is_ok(), &self.ctx.counters);
+        if result.is_err() {
+            self.ctx.counters.plans_failed.fetch_add(1, Ordering::Relaxed);
         }
+        result
+    }
+
+    fn run_sync(&mut self, ticket: u64) -> DiskResult<StagedLoad> {
+        let (t, plan, issued_at) = self.sync_queue.pop_front().ok_or(DiskError::QueueClosed)?;
+        debug_assert_eq!(t, ticket);
+        self.next_deliver += 1;
+        stage_caught(&self.ctx, plan, issued_at)
+    }
+
+    fn recv_threaded(&mut self, ticket: u64) -> DiskResult<StagedLoad> {
         loop {
             if let Some(result) = self.reordered.remove(&ticket) {
                 self.next_deliver += 1;
@@ -259,58 +465,153 @@ impl Prefetcher {
             let rx = self.done_rx.as_ref().ok_or(DiskError::QueueClosed)?;
             match rx.recv_timeout(self.timeout) {
                 Ok((t, result)) => {
-                    self.reordered.insert(t, result);
+                    // completions for abandoned tickets are stale: drop them
+                    if t >= self.next_deliver {
+                        self.reordered.insert(t, result);
+                    }
                 }
                 Err(RecvTimeoutError::Timeout) => {
+                    // abandon this ticket so later plans still deliver;
+                    // its completion, if it ever lands, is dropped above
+                    self.next_deliver += 1;
                     return Err(DiskError::Timeout {
                         waited: self.timeout,
-                    })
+                    });
                 }
                 Err(RecvTimeoutError::Disconnected) => return Err(DiskError::QueueClosed),
             }
         }
     }
 
+    /// Respawn any worker whose thread has exited (a contained panic
+    /// recycles the thread; see `spawn_worker`). Called from `submit`
+    /// before handing a job to the pool.
+    fn ensure_workers(&mut self) {
+        let (Some(job_rx), Some(done_tx)) = (self.job_rx.clone(), self.done_tx.clone()) else {
+            return;
+        };
+        for i in 0..self.workers.len() {
+            if self.workers[i].is_finished() {
+                let fresh = spawn_worker(i, job_rx.clone(), done_tx.clone(), self.ctx.clone());
+                let dead = std::mem::replace(&mut self.workers[i], fresh);
+                let _ = dead.join();
+                self.ctx
+                    .counters
+                    .workers_restarted
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Close the pipeline: refuse new work, drain in-flight completions,
+    /// and join workers — all bounded by `grace`. A worker that outlives
+    /// the grace period is detached rather than hanging shutdown; later
+    /// `submit`/`recv` calls return `QueueClosed`.
+    pub fn shutdown(&mut self, grace: Duration) {
+        self.closed = true;
+        // closing the job channel stops idle workers; dropping our
+        // completion sender lets the drain below observe disconnection
+        // once every worker is gone
+        drop(self.tx.take());
+        drop(self.done_tx.take());
+        let deadline = Instant::now() + grace;
+        if let Some(rx) = self.done_rx.take() {
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(_) => {}
+                    Err(_) => break, // disconnected (all workers exited) or out of grace
+                }
+            }
+        }
+        for h in self.workers.drain(..) {
+            while !h.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if h.is_finished() {
+                let _ = h.join();
+            }
+            // else: detach — a wedged worker must not hang shutdown
+        }
+        self.job_rx = None;
+        self.sync_queue.clear();
+        self.reordered.clear();
+        self.routes.clear();
+    }
+
     pub fn summary(&self) -> PrefetchSummary {
-        self.counters.summary()
+        self.ctx.counters.summary()
     }
 
     pub fn reset_counters(&self) {
-        self.counters.reset();
+        self.ctx.counters.reset();
     }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        // closing the job channel stops idle workers; draining completions
-        // unblocks any worker parked in a bounded `send`
-        drop(self.tx.take());
-        if let Some(rx) = self.done_rx.take() {
-            while rx.recv().is_ok() {}
-        }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
+        let grace = self.grace;
+        self.shutdown(grace);
+    }
+}
+
+fn spawn_worker(
+    idx: usize,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
+    done_tx: SyncSender<Completion>,
+    ctx: StageCtx,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("kvswap-prefetch-{idx}"))
+        .spawn(move || loop {
+            let job = { relock(&job_rx).recv() };
+            let Ok((ticket, plan, issued_at)) = job else {
+                break;
+            };
+            let result = stage_caught(&ctx, plan, issued_at);
+            // a thread that panicked once is recycled after delivering
+            // the typed error; `ensure_workers` respawns it
+            let panicked = matches!(&result, Err(DiskError::WorkerPanic { .. }));
+            if done_tx.send((ticket, result)).is_err() || panicked {
+                break;
+            }
+        })
+        .expect("spawn prefetch worker")
+}
+
+/// Run [`stage`] with panic containment: a panicking backend (or a bug in
+/// the staging path) becomes a typed `WorkerPanic` error for this plan
+/// instead of unwinding through the pool or the engine thread.
+fn stage_caught(ctx: &StageCtx, plan: PreloadPlan, issued_at: Instant) -> DiskResult<StagedLoad> {
+    match catch_unwind(AssertUnwindSafe(|| stage(ctx, plan, issued_at))) {
+        Ok(result) => result,
+        Err(payload) => {
+            ctx.counters.worker_panics.fetch_add(1, Ordering::Relaxed);
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(DiskError::WorkerPanic { what })
         }
     }
 }
 
-/// Execute one plan: flatten extents, read them coalesced, scatter the
-/// bytes back per `(sequence, tag)`.
-fn stage(
-    disk: &SimDisk,
-    pool: &BufferPool,
-    counters: &PrefetchCounters,
-    gap: u64,
-    plan: PreloadPlan,
-    issued_at: Instant,
-) -> DiskResult<StagedLoad> {
+/// Execute one plan: flatten extents, read them coalesced (with retries
+/// and checksum verification), scatter the bytes back per
+/// `(sequence, tag)`.
+fn stage(ctx: &StageCtx, plan: PreloadPlan, issued_at: Instant) -> DiskResult<StagedLoad> {
     let mut extents: Vec<(u64, usize)> = Vec::new();
     for (_, seq_exts) in &plan.per_seq {
         for e in seq_exts {
             extents.push((e.offset, e.len));
         }
     }
-    let (chunks, io_time) = read_coalesced(disk, &extents, gap, pool, counters)?;
+    let (chunks, io_time) =
+        read_coalesced_with(&ctx.disk, &extents, ctx.gap, &ctx.pool, &ctx.counters, &ctx.retry)?;
     let mut chunks = chunks.into_iter();
     let per_seq = plan
         .per_seq
@@ -323,7 +624,7 @@ fn stage(
             (seq, loads)
         })
         .collect();
-    counters.plans_completed.fetch_add(1, Ordering::Relaxed);
+    ctx.counters.plans_completed.fetch_add(1, Ordering::Relaxed);
     Ok(StagedLoad {
         layer: plan.layer,
         per_seq,
@@ -332,16 +633,36 @@ fn stage(
     })
 }
 
-/// Read `extents` through run coalescing: merge near-adjacent extents
-/// (byte gap ≤ `gap`) into single [`ReadReq`]s, issue one batched read,
-/// then scatter each extent's bytes back out in input order. Returns the
-/// per-extent byte chunks plus the modeled device time.
+/// [`read_coalesced_with`] under the default retry policy — kept as the
+/// stable entry point for callers outside the pipeline.
 pub fn read_coalesced(
     disk: &SimDisk,
     extents: &[(u64, usize)],
     gap: u64,
     pool: &BufferPool,
     counters: &PrefetchCounters,
+) -> DiskResult<(Vec<Vec<u8>>, Duration)> {
+    read_coalesced_with(disk, extents, gap, pool, counters, &RetryPolicy::default())
+}
+
+/// Read `extents` through run coalescing: merge near-adjacent extents
+/// (byte gap ≤ `gap`) into single [`ReadReq`]s, issue one batched read,
+/// then scatter each extent's bytes back out in input order. Returns the
+/// per-extent byte chunks plus the modeled device time.
+///
+/// Fault tolerance: the first attempt is one batched submission (keeping
+/// the modeled queue-depth overlap); staged extents are then verified
+/// against their write-time checksums. Runs that failed — batched error
+/// or checksum mismatch — are re-issued individually under the plan's
+/// retry budget with jittered exponential backoff. Bytes reach the
+/// caller only after every covering run has read and verified clean.
+pub fn read_coalesced_with(
+    disk: &SimDisk,
+    extents: &[(u64, usize)],
+    gap: u64,
+    pool: &BufferPool,
+    counters: &PrefetchCounters,
+    retry: &RetryPolicy,
 ) -> DiskResult<(Vec<Vec<u8>>, Duration)> {
     if extents.is_empty() {
         return Ok((Vec::new(), Duration::ZERO));
@@ -360,7 +681,50 @@ pub fn read_coalesced(
         .iter()
         .map(|r| ReadReq::with_buf(r.offset, pool.take(), r.len))
         .collect();
-    let io_time = disk.read_batch(&mut reqs)?;
+    let mut io_time = Duration::ZERO;
+    let mut budget = retry.budget();
+
+    // First attempt: the whole plan as one batched submission.
+    let pending: Vec<usize> = match disk.read_batch(&mut reqs) {
+        Ok(d) => {
+            io_time += d;
+            (0..runs.len())
+                .filter(|&ri| verify_run(disk, &runs[ri], &reqs[ri], extents, counters).is_err())
+                .collect()
+        }
+        Err(e) if e.is_retryable() => (0..runs.len()).collect(),
+        Err(e) => return Err(e),
+    };
+
+    // Recovery: re-issue only the failed runs, individually, under the
+    // per-plan budget. Every read here is a re-issue of a run that
+    // already failed once (batched error or checksum mismatch), so each
+    // counts as a retry whether or not it succeeds.
+    for ri in pending {
+        let mut attempt = 0u32;
+        loop {
+            counters.io_retries.fetch_add(1, Ordering::Relaxed);
+            disk.stats().record_retry();
+            let read = disk.read_batch(std::slice::from_mut(&mut reqs[ri]));
+            let verified = read.and_then(|d| {
+                verify_run(disk, &runs[ri], &reqs[ri], extents, counters)?;
+                Ok(d)
+            });
+            match verified {
+                Ok(d) => {
+                    io_time += d;
+                    break;
+                }
+                Err(e) => {
+                    if !e.is_retryable() || !budget.try_consume() {
+                        return Err(e);
+                    }
+                    retry.sleep_before_retry(attempt);
+                    attempt += 1;
+                }
+            }
+        }
+    }
 
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); extents.len()];
     let mut staged = 0u64;
@@ -378,10 +742,31 @@ pub fn read_coalesced(
     Ok((out, io_time))
 }
 
+/// Verify every member extent of `run` against its write-time checksum.
+/// Extents the disk never stamped at exactly that (offset, len) pass.
+fn verify_run(
+    disk: &SimDisk,
+    run: &Run,
+    req: &ReadReq,
+    extents: &[(u64, usize)],
+    counters: &PrefetchCounters,
+) -> DiskResult<()> {
+    for &(idx, delta) in &run.members {
+        let (offset, len) = extents[idx];
+        if let Err(e) = disk.verify_extent(offset, &req.buf[delta..delta + len]) {
+            counters.corrupt_detected.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::RetryConfig;
     use crate::disk::backend::{Backend, MemBackend};
+    use crate::disk::fault::{Fault, FaultBackend};
     use crate::disk::profile::DiskProfile;
 
     fn disk_with_image(n: usize) -> (Arc<SimDisk>, Vec<u8>) {
@@ -390,6 +775,18 @@ mod tests {
         backend.write_at(0, &image).unwrap();
         let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), backend, None));
         (disk, image)
+    }
+
+    /// Fast backoff so fault tests don't sleep their way through CI.
+    fn fast_retry(max_retries: u32, breaker_threshold: u32, probe_after: u32) -> RetryPolicy {
+        RetryPolicy::new(RetryConfig {
+            max_retries,
+            backoff_base_ms: 0.05,
+            backoff_max_ms: 0.2,
+            jitter: 0.5,
+            breaker_threshold,
+            breaker_probe_after: probe_after,
+        })
     }
 
     fn plan(layer: usize, extents: &[(u64, usize)]) -> PreloadPlan {
@@ -431,6 +828,7 @@ mod tests {
         };
         let mut p = Prefetcher::spawn(disk, &cfg);
         assert!(!p.is_synchronous());
+        assert_eq!(p.breaker_state(), BreakerState::Closed);
         let layouts: Vec<Vec<(u64, usize)>> = (0..6)
             .map(|l| {
                 (0..8)
@@ -451,6 +849,7 @@ mod tests {
         }
         let s = p.summary();
         assert_eq!(s.plans, 6);
+        assert_eq!(s.plans_failed, 0);
         assert_eq!(s.extents, 6 * 8);
         // 300-byte stride with 128-byte extents and gap 64 merges nothing;
         // still at most one run per extent
@@ -509,6 +908,8 @@ mod tests {
         let mut p = Prefetcher::spawn(disk, &cfg);
         p.submit(plan(0, &[(4096, 64)])).unwrap();
         assert!(matches!(p.recv(), Err(DiskError::OutOfBounds { .. })));
+        let s = p.summary();
+        assert_eq!(s.plans_failed, 1);
     }
 
     #[test]
@@ -525,5 +926,209 @@ mod tests {
         }
         // drop without receiving: Drop must drain and join, not hang
         drop(p);
+    }
+
+    #[test]
+    fn shutdown_is_bounded_and_flags_queue_closed() {
+        let (disk, _) = disk_with_image(1 << 14);
+        let cfg = PrefetchConfig {
+            workers: 2,
+            queue_depth: 2,
+            coalesce_gap: 0,
+        };
+        let mut p = Prefetcher::spawn(disk, &cfg);
+        p.submit(plan(0, &[(0, 128)])).unwrap();
+        let t0 = Instant::now();
+        p.shutdown(Duration::from_secs(2));
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(matches!(p.submit(plan(1, &[(0, 64)])), Err(DiskError::QueueClosed)));
+        assert!(matches!(p.recv(), Err(DiskError::QueueClosed)));
+        // idempotent
+        p.shutdown(Duration::from_millis(10));
+    }
+
+    #[test]
+    fn transient_faults_are_retried_to_clean_bytes() {
+        let image: Vec<u8> = (0..(1 << 14)).map(|i| (i * 31 % 251) as u8).collect();
+        let inner = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::quiet(inner));
+        let disk = SimDisk::new(DiskProfile::nvme(), fb.clone(), None);
+        disk.write(0, &image).unwrap();
+        // fail ops 1 and 2 (first attempt of the second read + its first
+        // retry), then succeed
+        fb.script_at(1, Fault::TransientIo);
+        fb.script_at(2, Fault::TransientIo);
+        let pool = BufferPool::new(4);
+        let counters = PrefetchCounters::default();
+        let retry = fast_retry(3, 4, 8);
+        let extents = [(0u64, 256usize), (8192, 256)];
+        let (chunks, _) =
+            read_coalesced_with(&disk, &extents, 0, &pool, &counters, &retry).unwrap();
+        assert_eq!(chunks[0], &image[..256]);
+        assert_eq!(chunks[1], &image[8192..8448]);
+        let s = counters.summary();
+        assert!(s.io_retries >= 2, "retries: {}", s.io_retries);
+        assert_eq!(disk.stats().snapshot().read_retries, s.io_retries);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_surfaces_the_error() {
+        let inner = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::quiet(inner));
+        let disk = SimDisk::new(DiskProfile::nvme(), fb.clone(), None);
+        disk.write(0, &vec![5u8; 4096]).unwrap();
+        fb.poison(0, 4096); // every attempt fails
+        let pool = BufferPool::new(2);
+        let counters = PrefetchCounters::default();
+        let retry = fast_retry(2, 4, 8);
+        let err =
+            read_coalesced_with(&disk, &[(0, 512)], 0, &pool, &counters, &retry).unwrap_err();
+        assert!(matches!(err, DiskError::Io { .. }));
+        // 3 re-issues: the budget of 2 allows two more after the first
+        assert_eq!(counters.summary().io_retries, 3);
+    }
+
+    #[test]
+    fn bit_flips_are_detected_and_reread() {
+        let image: Vec<u8> = (0..8192).map(|i| (i % 256) as u8).collect();
+        let inner = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::quiet(inner));
+        let disk = SimDisk::new(DiskProfile::nvme(), fb.clone(), None);
+        // stamp a whole-extent record so verification is exact-match
+        disk.write(4096, &image[..2048]).unwrap();
+        fb.script_at(0, Fault::BitFlip);
+        let pool = BufferPool::new(2);
+        let counters = PrefetchCounters::default();
+        let retry = fast_retry(3, 4, 8);
+        let (chunks, _) =
+            read_coalesced_with(&disk, &[(4096, 2048)], 0, &pool, &counters, &retry).unwrap();
+        assert_eq!(chunks[0], &image[..2048], "re-read must replace flipped bytes");
+        let s = counters.summary();
+        assert_eq!(s.corrupt_detected, 1);
+        assert!(s.io_retries >= 1);
+    }
+
+    #[test]
+    fn worker_panic_is_contained_and_worker_respawns() {
+        let image: Vec<u8> = vec![9u8; 4096];
+        let inner = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::quiet(inner));
+        let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), fb.clone(), None));
+        disk.write(0, &image).unwrap();
+        let cfg = PrefetchConfig {
+            workers: 2,
+            queue_depth: 2,
+            coalesce_gap: 0,
+        };
+        // threshold high enough that one panic does not trip the breaker
+        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 8, 8));
+        fb.script_at(0, Fault::Panic);
+        p.submit(plan(0, &[(0, 256)])).unwrap();
+        let err = p.recv().unwrap_err();
+        assert!(matches!(err, DiskError::WorkerPanic { .. }), "{err}");
+        assert_eq!(p.summary().worker_panics, 1);
+        // the pool keeps serving (surviving worker) and the dead thread is
+        // respawned by a later submit
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut layer = 1;
+        while p.summary().workers_restarted == 0 && Instant::now() < deadline {
+            p.submit(plan(layer, &[(0, 256)])).unwrap();
+            let staged = p.recv().unwrap();
+            assert_eq!(staged.layer, layer);
+            layer += 1;
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(p.summary().workers_restarted, 1, "dead worker respawned");
+        assert_eq!(p.breaker_state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn buffer_pool_recovers_from_poisoned_lock() {
+        let pool = Arc::new(BufferPool::new(2));
+        pool.put(vec![1, 2, 3]);
+        let p2 = pool.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = p2.bufs.lock().unwrap();
+            panic!("poison the pool lock");
+        })
+        .join();
+        // take/put must recover, not propagate the poison
+        let buf = pool.take();
+        pool.put(buf);
+    }
+
+    #[test]
+    fn breaker_trips_to_sync_and_recovers_via_probe() {
+        let image: Vec<u8> = vec![7u8; 8192];
+        let inner = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::quiet(inner));
+        let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), fb.clone(), None));
+        disk.write(0, &image).unwrap();
+        let cfg = PrefetchConfig {
+            workers: 2,
+            queue_depth: 2,
+            coalesce_gap: 0,
+        };
+        // no retries, trip after 3 failures, probe after 2 clean sync plans
+        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 3, 2));
+        fb.poison(0, 8192);
+
+        let mut layer = 0;
+        let mut submit_recv = |p: &mut Prefetcher, expect_ok: bool| {
+            p.submit(plan(layer, &[(0, 512)])).unwrap();
+            let r = p.recv();
+            assert_eq!(r.is_ok(), expect_ok, "layer {layer}: {r:?}");
+            layer += 1;
+        };
+        for _ in 0..3 {
+            submit_recv(&mut p, false);
+        }
+        assert_eq!(p.breaker_state(), BreakerState::Open, "tripped after 3");
+        assert_eq!(p.summary().breaker_trips, 1);
+
+        // open: plans run inline; still failing while the device is sick
+        submit_recv(&mut p, false);
+        assert_eq!(p.breaker_state(), BreakerState::Open);
+
+        // device recovers: sync plans succeed, then a probe closes it
+        fb.heal();
+        submit_recv(&mut p, true); // sync success 1
+        submit_recv(&mut p, true); // sync success 2
+        assert_eq!(p.breaker_state(), BreakerState::Open);
+        submit_recv(&mut p, true); // half-open probe through the pool
+        assert_eq!(p.breaker_state(), BreakerState::Closed, "probe closed it");
+
+        // fully healthy again
+        submit_recv(&mut p, true);
+        let s = p.summary();
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.plans_failed, 4);
+    }
+
+    #[test]
+    fn recv_timeout_abandons_only_that_ticket() {
+        let image: Vec<u8> = (0..(1 << 14)).map(|i| (i * 31 % 251) as u8).collect();
+        // stall the first read long past the recv timeout, then let
+        // everything else through
+        let slow = Arc::new(FaultBackend::quiet(Arc::new(MemBackend::new())));
+        slow.script_at(0, Fault::LatencySpike(Duration::from_millis(250)));
+        let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), slow, None));
+        disk.write(0, &image).unwrap();
+        let cfg = PrefetchConfig {
+            workers: 1,
+            queue_depth: 2,
+            coalesce_gap: 0,
+        };
+        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 8, 8));
+        p.set_timeout(Duration::from_millis(30));
+        p.submit(plan(0, &[(0, 128)])).unwrap(); // will stall past timeout
+        p.submit(plan(1, &[(256, 128)])).unwrap();
+        assert!(matches!(p.recv(), Err(DiskError::Timeout { .. })));
+        // the next ticket still delivers once the stall clears; its stale
+        // predecessor's completion is dropped, not delivered out of order
+        p.set_timeout(Duration::from_secs(10));
+        let staged = p.recv().unwrap();
+        assert_eq!(staged.layer, 1);
+        assert_eq!(staged.per_seq[0].1[0].1, &image[256..384]);
     }
 }

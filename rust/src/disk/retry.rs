@@ -1,0 +1,173 @@
+//! Bounded-retry policy for the staging read path.
+//!
+//! A preload plan gets a small *retry budget*; each failed coalesced run
+//! (transient `Io`, checksum `Corrupt`) consumes one unit and sleeps a
+//! jittered exponential backoff before re-issuing. The budget is
+//! per-plan, not per-run, so a badly failing plan cannot multiply its
+//! own latency unboundedly — it exhausts the budget and surfaces the
+//! typed error to the circuit breaker instead.
+//!
+//! Whether an error is worth a retry at all is decided by
+//! [`DiskError::is_retryable`](super::DiskError::is_retryable); the
+//! policy here only controls *how many* and *how spaced*.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::relock;
+use crate::config::RetryConfig;
+use crate::util::rng::Rng;
+
+/// Shared, thread-safe retry policy. One instance serves every prefetch
+/// worker; the only shared state is the jitter PRNG behind a mutex that
+/// is touched exclusively on the (cold) failure path.
+#[derive(Debug)]
+pub struct RetryPolicy {
+    cfg: RetryConfig,
+    rng: Mutex<Rng>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::new(RetryConfig::default())
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(cfg: RetryConfig) -> RetryPolicy {
+        RetryPolicy {
+            rng: Mutex::new(Rng::new(0x9E37_79B9_7F4A_7C15 ^ cfg.max_retries as u64)),
+            cfg,
+        }
+    }
+
+    /// A policy that never retries (clean-path tests, strict benches).
+    pub fn disabled() -> RetryPolicy {
+        RetryPolicy::new(RetryConfig {
+            max_retries: 0,
+            ..RetryConfig::default()
+        })
+    }
+
+    pub fn config(&self) -> &RetryConfig {
+        &self.cfg
+    }
+
+    /// Fresh per-plan budget.
+    pub fn budget(&self) -> RetryBudget {
+        RetryBudget {
+            remaining: self.cfg.max_retries,
+            used: 0,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (0-based): exponential from
+    /// `backoff_base_ms`, clamped at `backoff_max_ms`, scaled by a
+    /// uniform jitter factor in `[1-jitter, 1]`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = 2f64.powi(attempt.min(30) as i32);
+        let ms = (self.cfg.backoff_base_ms * exp).min(self.cfg.backoff_max_ms);
+        let jitter = self.cfg.jitter.clamp(0.0, 1.0);
+        let factor = if jitter > 0.0 {
+            let u = relock(&self.rng).f64();
+            1.0 - jitter * u
+        } else {
+            1.0
+        };
+        Duration::from_micros((ms.max(0.0) * factor * 1000.0) as u64)
+    }
+
+    /// Sleep the backoff for retry `attempt` on the calling thread.
+    pub fn sleep_before_retry(&self, attempt: u32) {
+        let d = self.backoff(attempt);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// Countdown of re-issues one preload plan may still spend.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryBudget {
+    remaining: u32,
+    used: u32,
+}
+
+impl RetryBudget {
+    /// Spend one retry; `false` means the budget is exhausted and the
+    /// error must surface.
+    pub fn try_consume(&mut self) -> bool {
+        if self.remaining == 0 {
+            false
+        } else {
+            self.remaining -= 1;
+            self.used += 1;
+            true
+        }
+    }
+
+    pub fn used(&self) -> u32 {
+        self.used
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.remaining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_then_clamps() {
+        let p = RetryPolicy::new(RetryConfig {
+            max_retries: 8,
+            backoff_base_ms: 1.0,
+            backoff_max_ms: 8.0,
+            jitter: 0.0, // deterministic for the shape assertion
+            ..RetryConfig::default()
+        });
+        let d: Vec<Duration> = (0..6).map(|a| p.backoff(a)).collect();
+        assert_eq!(d[0], Duration::from_millis(1));
+        assert_eq!(d[1], Duration::from_millis(2));
+        assert_eq!(d[2], Duration::from_millis(4));
+        // clamped from attempt 3 on
+        assert_eq!(d[3], Duration::from_millis(8));
+        assert_eq!(d[5], Duration::from_millis(8));
+    }
+
+    #[test]
+    fn jitter_stays_in_band() {
+        let p = RetryPolicy::new(RetryConfig {
+            backoff_base_ms: 10.0,
+            backoff_max_ms: 10.0,
+            jitter: 0.5,
+            ..RetryConfig::default()
+        });
+        for _ in 0..64 {
+            let d = p.backoff(0);
+            assert!(
+                d >= Duration::from_millis(5) && d <= Duration::from_millis(10),
+                "jittered backoff {d:?} outside [5ms, 10ms]"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_counts_down_and_stops() {
+        let p = RetryPolicy::new(RetryConfig {
+            max_retries: 2,
+            ..RetryConfig::default()
+        });
+        let mut b = p.budget();
+        assert!(b.try_consume());
+        assert!(b.try_consume());
+        assert!(!b.try_consume(), "third retry must be refused");
+        assert_eq!(b.used(), 2);
+        assert_eq!(b.remaining(), 0);
+
+        let mut none = RetryPolicy::disabled().budget();
+        assert!(!none.try_consume());
+    }
+}

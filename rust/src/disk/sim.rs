@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use super::backend::{Backend, ReadReq};
 use super::error::DiskResult;
+use super::integrity::IntegrityMap;
 use super::profile::DiskProfile;
 use super::stats::DiskStats;
 use crate::util::clock::Clock;
@@ -29,6 +30,9 @@ pub struct SimDisk {
     backend: Arc<dyn Backend>,
     pacing: Option<Clock>,
     stats: Arc<DiskStats>,
+    /// Write-time checksums, verified on exact-extent reads (see
+    /// [`super::integrity`] for the failure model).
+    integrity: IntegrityMap,
 }
 
 impl SimDisk {
@@ -38,6 +42,7 @@ impl SimDisk {
             backend,
             pacing,
             stats: Arc::new(DiskStats::default()),
+            integrity: IntegrityMap::new(),
         }
     }
 
@@ -54,9 +59,25 @@ impl SimDisk {
         self.stats.clone()
     }
 
+    pub fn integrity(&self) -> &IntegrityMap {
+        &self.integrity
+    }
+
+    /// Verify `bytes` staged from `offset` against the write-time
+    /// checksum (no-op for extents that were never stamped at exactly
+    /// this offset/length). Counts detections in [`DiskStats`].
+    pub fn verify_extent(&self, offset: u64, bytes: &[u8]) -> DiskResult<()> {
+        self.integrity.verify(offset, bytes).map_err(|e| {
+            self.stats.record_corruption();
+            e
+        })
+    }
+
     /// Read `buf.len()` bytes at `offset`; returns the *modeled* duration.
+    /// Checksum-verified when the extent matches a stamped write.
     pub fn read(&self, offset: u64, buf: &mut [u8]) -> DiskResult<Duration> {
         self.backend.read_at(offset, buf)?;
+        self.verify_extent(offset, buf)?;
         let dur = self.profile.read_time(offset, buf.len() as u64);
         let phys = self.profile.physical_bytes(offset, buf.len() as u64);
         self.stats.record_read(buf.len() as u64, phys, dur);
@@ -102,9 +123,11 @@ impl SimDisk {
         Ok(dur)
     }
 
-    /// Write; returns modeled duration.
+    /// Write; returns modeled duration. Stamps the extent's checksum so
+    /// later staging reads can detect silent corruption.
     pub fn write(&self, offset: u64, data: &[u8]) -> DiskResult<Duration> {
         self.backend.write_at(offset, data)?;
+        self.integrity.stamp(offset, data);
         let dur = self.profile.write_time(offset, data.len() as u64);
         let phys = self.profile.physical_bytes(offset, data.len() as u64);
         self.stats.record_write(data.len() as u64, phys, dur);
@@ -168,6 +191,30 @@ mod tests {
         assert_eq!(&out[4..], &[100, 101, 102, 103]);
         // two ops => two latency charges
         assert!(t >= DiskProfile::nvme().op_latency * 2);
+    }
+
+    #[test]
+    fn silent_backend_corruption_is_caught_on_read() {
+        use crate::disk::error::DiskError;
+        let backend = Arc::new(MemBackend::new());
+        let d = SimDisk::new(DiskProfile::nvme(), backend.clone(), None);
+        let rec = vec![9u8; 4096];
+        d.write(8192, &rec).unwrap();
+        let mut buf = vec![0u8; 4096];
+        d.read(8192, &mut buf).unwrap();
+
+        // flip one bit *underneath* the SimDisk (no re-stamp)
+        let mut bad = rec.clone();
+        bad[100] ^= 0x01;
+        backend.write_at(8192, &bad).unwrap();
+        let err = d.read(8192, &mut buf).unwrap_err();
+        assert!(matches!(err, DiskError::Corrupt { offset: 8192, .. }));
+        assert_eq!(d.stats().snapshot().corruptions_detected, 1);
+
+        // a legitimate overwrite through SimDisk re-stamps
+        d.write(8192, &bad).unwrap();
+        d.read(8192, &mut buf).unwrap();
+        assert_eq!(buf, bad);
     }
 
     #[test]

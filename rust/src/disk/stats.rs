@@ -17,6 +17,8 @@ pub struct DiskStats {
     write_busy_ns: AtomicU64,
     coalesce_extents_in: AtomicU64,
     coalesce_runs_out: AtomicU64,
+    read_retries: AtomicU64,
+    corruptions: AtomicU64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -33,6 +35,10 @@ pub struct DiskSnapshot {
     pub coalesce_extents_in: u64,
     /// …and the physical runs it issued for them.
     pub coalesce_runs_out: u64,
+    /// Read operations that were re-issued after a retryable failure.
+    pub read_retries: u64,
+    /// Staged extents whose write-time checksum did not match.
+    pub corruptions_detected: u64,
 }
 
 impl DiskStats {
@@ -60,6 +66,16 @@ impl DiskStats {
         self.coalesce_runs_out.fetch_add(runs_out, Ordering::Relaxed);
     }
 
+    /// One re-issued read after a retryable failure.
+    pub fn record_retry(&self) {
+        self.read_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One checksum mismatch caught at staging.
+    pub fn record_corruption(&self) {
+        self.corruptions.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_write(&self, logical: u64, physical: u64, dur: Duration) {
         self.write_ops.fetch_add(1, Ordering::Relaxed);
         self.logical_write.fetch_add(logical, Ordering::Relaxed);
@@ -80,6 +96,8 @@ impl DiskStats {
             write_busy: Duration::from_nanos(self.write_busy_ns.load(Ordering::Relaxed)),
             coalesce_extents_in: self.coalesce_extents_in.load(Ordering::Relaxed),
             coalesce_runs_out: self.coalesce_runs_out.load(Ordering::Relaxed),
+            read_retries: self.read_retries.load(Ordering::Relaxed),
+            corruptions_detected: self.corruptions.load(Ordering::Relaxed),
         }
     }
 
@@ -94,6 +112,8 @@ impl DiskStats {
         self.write_busy_ns.store(0, Ordering::Relaxed);
         self.coalesce_extents_in.store(0, Ordering::Relaxed);
         self.coalesce_runs_out.store(0, Ordering::Relaxed);
+        self.read_retries.store(0, Ordering::Relaxed);
+        self.corruptions.store(0, Ordering::Relaxed);
     }
 }
 
@@ -168,6 +188,19 @@ mod tests {
         assert!((snap.coalesce_factor() - 3.0).abs() < 1e-12);
         s.reset();
         assert_eq!(s.snapshot().coalesce_extents_in, 0);
+    }
+
+    #[test]
+    fn retry_and_corruption_counters() {
+        let s = DiskStats::default();
+        s.record_retry();
+        s.record_retry();
+        s.record_corruption();
+        let snap = s.snapshot();
+        assert_eq!(snap.read_retries, 2);
+        assert_eq!(snap.corruptions_detected, 1);
+        s.reset();
+        assert_eq!(s.snapshot().read_retries, 0);
     }
 
     #[test]

@@ -9,11 +9,12 @@
 //!
 //! Examples:
 //!   kvswap run --policy kvswap --batch 4 --context 2048 --steps 64 --disk nvme
+//!   kvswap run --policy kvswap --fault-rate 0.05 --fault-seed 7 --io-retries 5
 //!   kvswap tune --budget-mib 2 --disk emmc --out kvswap_tuned.json
 //!   kvswap serve --addr 127.0.0.1:7777 --policy kvswap --disk nvme
 
 use kvswap::baselines::{configure, Budget};
-use kvswap::config::{KvSwapConfig, PrefetchConfig};
+use kvswap::config::{FaultConfig, KvSwapConfig, PrefetchConfig, RetryConfig};
 use kvswap::coordinator::batcher::BatcherConfig;
 use kvswap::coordinator::router::Router;
 use kvswap::coordinator::{Engine, EngineConfig, Policy};
@@ -85,6 +86,21 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
         Some(path) => StorageBackend::File(path.into()),
         None => StorageBackend::Mem,
     };
+    let fault = FaultConfig {
+        rate: args.f64_or("fault-rate", 0.0),
+        corruption_rate: args.f64_or("fault-corrupt-rate", 0.0),
+        seed: args.u64_or("fault-seed", 0),
+        persistent: args.flag("fault-persistent"),
+    };
+    let retry_default = RetryConfig::default();
+    let retry = RetryConfig {
+        max_retries: args.u64_or("io-retries", retry_default.max_retries as u64) as u32,
+        breaker_threshold: args.u64_or(
+            "breaker-threshold",
+            retry_default.breaker_threshold as u64,
+        ) as u32,
+        ..retry_default
+    };
     EngineConfig::builder()
         .preset(args.str_or("preset", "nano"))
         .batch(args.usize_or("batch", 1))
@@ -93,6 +109,8 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
         .disk(disk)
         .storage(storage)
         .prefetch(prefetch)
+        .fault(fault)
+        .retry(retry)
         .real_time(args.flag("real-time"))
         .time_scale(args.f64_or("time-scale", 1.0))
         .max_context(args.usize_or("max-context", args.usize_or("context", 2048)))
@@ -130,6 +148,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         println!("reuse rate: {:.1}%", r * 100.0);
     }
     println!("selection overlap: {:.1}%", stats.mean_overlap * 100.0);
+    let pf = stats.prefetch;
+    if pf.io_retries + pf.corrupt_detected + pf.worker_panics + pf.breaker_trips > 0
+        || stats.degraded_steps > 0
+    {
+        println!(
+            "fault recovery: {} retries, {} corrupt extents, {} worker panics \
+             ({} respawns), {} breaker trips, {} degraded layer-steps",
+            pf.io_retries,
+            pf.corrupt_detected,
+            pf.worker_panics,
+            pf.workers_restarted,
+            pf.breaker_trips,
+            stats.degraded_steps
+        );
+    }
     println!(
         "management memory: {}",
         kvswap::util::fmt_bytes(engine.management_bytes())

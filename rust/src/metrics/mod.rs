@@ -125,6 +125,10 @@ pub struct DecodeStats {
     /// What the prefetch pipeline did (plans, extents→runs coalescing,
     /// staged bytes) over this run.
     pub prefetch: PrefetchSummary,
+    /// Layer-awaits that fell back to attention over resident state
+    /// because their staged load was unrecoverable (degradation rung 4 —
+    /// see `disk` module docs). 0 on a healthy device.
+    pub degraded_steps: u64,
 }
 
 impl DecodeStats {
@@ -233,6 +237,7 @@ mod tests {
             bytes_loaded: 1 << 20,
             mean_overlap: 0.7,
             prefetch: PrefetchSummary::default(),
+            degraded_steps: 0,
         };
         assert!((s.tokens_per_sec() - 25.0).abs() < 1e-9);
     }
