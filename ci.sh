@@ -9,10 +9,22 @@ cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo test -q
 
-# fault-matrix smoke: the CLI decode path under a 5% flaky disk (seeded,
-# reproducible) must complete and recover, not crash (needs artifacts)
+# fault matrix: the CLI decode path under a seeded flaky disk must
+# complete and recover at every (rate, seed) point, not crash
+# (needs artifacts)
 ARTIFACTS="${KVSWAP_ARTIFACTS:-artifacts}"
 if [ -f "$ARTIFACTS/manifest.json" ]; then
+  for rate in 0.01 0.05 0.20; do
+    for seed in 7 11; do
+      cargo run --release -q -- run --policy kvswap --context 512 --steps 8 \
+        --fault-rate "$rate" --fault-corrupt-rate 0.02 --fault-seed "$seed" \
+        --io-retries 5
+    done
+  done
+  # persistent-fault run with the KV store enabled: deterministic device
+  # corruption must drive the scrub path to quarantine poisoned entries
+  # (store eviction), not wedge the run
   cargo run --release -q -- run --policy kvswap --context 512 --steps 8 \
-    --fault-rate 0.05 --fault-corrupt-rate 0.02 --fault-seed 7 --io-retries 5
+    --fault-rate 0.05 --fault-corrupt-rate 0.05 --fault-seed 7 --io-retries 5 \
+    --fault-persistent --store-mem --store-capacity 64
 fi

@@ -400,6 +400,70 @@ impl RetryConfig {
     }
 }
 
+/// Persistent KV store knobs (`store::PersistentStore`). Disabled by
+/// default: the store costs a manifest rewrite per save, so it is opt-in
+/// via `--store-dir`/`--store-mem`. With `dir == None` the store is
+/// memory-backed — prefix reuse within the process, nothing on disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreConfig {
+    pub enabled: bool,
+    /// Directory for `store.bin` + `manifest.json`; `None` ⇒ in-memory.
+    pub dir: Option<std::path::PathBuf>,
+    /// Capacity ceiling for stored records; LRU eviction keeps under it.
+    pub capacity_bytes: u64,
+    /// Seconds between scheduled scrub passes (≤ 0 ⇒ every idle tick).
+    pub scrub_interval_s: f64,
+    /// Max entries verified per scrub pass (cursor rotates across passes).
+    pub scrub_budget: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            enabled: false,
+            dir: None,
+            capacity_bytes: 256 << 20,
+            scrub_interval_s: 5.0,
+            scrub_budget: 4,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("enabled", self.enabled.into()),
+            (
+                "dir",
+                match &self.dir {
+                    Some(d) => d.display().to_string().into(),
+                    None => Json::Null,
+                },
+            ),
+            ("capacity_bytes", (self.capacity_bytes as usize).into()),
+            ("scrub_interval_s", self.scrub_interval_s.into()),
+            ("scrub_budget", self.scrub_budget.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> StoreConfig {
+        let d = StoreConfig::default();
+        StoreConfig {
+            enabled: j
+                .get("enabled")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.enabled),
+            dir: j
+                .get("dir")
+                .and_then(|v| v.as_str())
+                .map(std::path::PathBuf::from),
+            capacity_bytes: j.usize_or("capacity_bytes", d.capacity_bytes as usize) as u64,
+            scrub_interval_s: j.f64_or("scrub_interval_s", d.scrub_interval_s),
+            scrub_budget: j.usize_or("scrub_budget", d.scrub_budget),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -523,5 +587,24 @@ mod tests {
         let back = RetryConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
         assert_eq!(back, c);
         assert!(RetryConfig::default().breaker_threshold >= 1);
+    }
+
+    #[test]
+    fn store_config_roundtrip() {
+        let d = StoreConfig::default();
+        assert!(!d.enabled, "persistent store must be opt-in");
+        assert!(d.capacity_bytes > 0);
+        let c = StoreConfig {
+            enabled: true,
+            dir: Some(std::path::PathBuf::from("/tmp/kv-store")),
+            capacity_bytes: 64 << 20,
+            scrub_interval_s: 0.5,
+            scrub_budget: 2,
+        };
+        let back = StoreConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
+        assert_eq!(back, c);
+        // None dir serializes as null and round-trips to None
+        let back = StoreConfig::from_json(&Json::parse(&d.to_json().to_string()).unwrap());
+        assert_eq!(back, d);
     }
 }

@@ -116,6 +116,7 @@ mod tests {
             decode: 8,
             arrival_s: 0.0,
             seed: id,
+            tokens: None,
         }
     }
 

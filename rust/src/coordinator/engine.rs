@@ -33,14 +33,15 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::policy::Policy;
-use crate::config::{FaultConfig, KvSwapConfig, ModelSpec, PrefetchConfig, RetryConfig};
+use crate::config::{FaultConfig, KvSwapConfig, ModelSpec, PrefetchConfig, RetryConfig, StoreConfig};
 use crate::disk::{
-    Backend, DiskProfile, FaultBackend, PlannedExtent, Prefetcher, PreloadPlan, RetryPolicy,
-    SimDisk, StorageBackend,
+    Backend, BreakerState, DiskProfile, FaultBackend, PlannedExtent, Prefetcher, PreloadPlan,
+    RetryPolicy, SimDisk, StorageBackend,
 };
 use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
 use crate::metrics::{Breakdown, DecodeStats, Phase};
 use crate::predictor::{self, OverlapTracker};
+use crate::store::PersistentStore;
 use crate::runtime::host_ref::{HostModel, KvLayer};
 use crate::runtime::tensor::{Tensor, TensorI32};
 use crate::runtime::{ModelRuntime, PjrtRuntime};
@@ -65,6 +66,8 @@ pub struct EngineConfig {
     pub fault: FaultConfig,
     /// Retry/backoff + circuit-breaker policy for staging reads.
     pub retry: RetryConfig,
+    /// Persistent KV store for cross-request prefix reuse (opt-in).
+    pub store: StoreConfig,
     /// true: SimDisk sleeps (scaled); false: virtual-clock accounting.
     pub real_time: bool,
     pub time_scale: f64,
@@ -85,6 +88,7 @@ impl Default for EngineConfig {
             prefetch: PrefetchConfig::default(),
             fault: FaultConfig::default(),
             retry: RetryConfig::default(),
+            store: StoreConfig::default(),
             real_time: false,
             time_scale: 1.0,
             max_context: 2048,
@@ -156,6 +160,11 @@ impl EngineConfigBuilder {
         self
     }
 
+    pub fn store(mut self, store: StoreConfig) -> Self {
+        self.cfg.store = store;
+        self
+    }
+
     pub fn real_time(mut self, real_time: bool) -> Self {
         self.cfg.real_time = real_time;
         self
@@ -220,6 +229,20 @@ impl EngineConfigBuilder {
             c.retry.breaker_probe_after >= 1,
             "retry.breaker_probe_after must be >= 1"
         );
+        anyhow::ensure!(
+            c.store.scrub_interval_s.is_finite(),
+            "store.scrub_interval_s must be finite"
+        );
+        if c.store.enabled {
+            anyhow::ensure!(
+                c.store.capacity_bytes >= 1,
+                "store.capacity_bytes must be >= 1 when the store is enabled"
+            );
+            anyhow::ensure!(
+                c.store.scrub_budget >= 1,
+                "store.scrub_budget must be >= 1 when the store is enabled"
+            );
+        }
         let needed = c.kv.selected_entries() + c.kv.rb_slots;
         anyhow::ensure!(
             c.kv.p_sel >= needed,
@@ -287,10 +310,28 @@ pub struct Engine {
     /// Layer-awaits that fell back to resident-only attention after an
     /// unrecoverable staged load (degradation rung 4).
     degraded: u64,
+    /// Persistent cross-request KV store (None unless `cfg.store.enabled`
+    /// or a shared store was injected via [`Engine::with_store`]).
+    store: Option<Arc<PersistentStore>>,
+    /// Prompt tokens warm-started from the store instead of recomputed,
+    /// summed over prefill calls and all batch rows.
+    reused_prefix_tokens: u64,
 }
 
 impl Engine {
     pub fn new(rt: Rc<PjrtRuntime>, cfg: EngineConfig) -> anyhow::Result<Engine> {
+        Engine::with_store(rt, cfg, None)
+    }
+
+    /// Build an engine sharing an already-open persistent store. The
+    /// router uses this to keep one store alive across per-wave engines;
+    /// `None` with `cfg.store.enabled` opens a fresh store from the
+    /// engine's own layout (the single source of slot-geometry truth).
+    pub fn with_store(
+        rt: Rc<PjrtRuntime>,
+        cfg: EngineConfig,
+        store: Option<Arc<PersistentStore>>,
+    ) -> anyhow::Result<Engine> {
         let info = rt
             .manifest
             .presets
@@ -373,6 +414,22 @@ impl Engine {
             spec.n_layers,
             page_align,
         );
+        let store = match store {
+            Some(s) => {
+                anyhow::ensure!(
+                    *s.layout() == layout,
+                    "shared store layout does not match this engine's"
+                );
+                Some(s)
+            }
+            None if cfg.store.enabled => Some(Arc::new(PersistentStore::open(
+                &cfg.store,
+                cfg.disk.clone(),
+                &cfg.fault,
+                layout.clone(),
+            )?)),
+            None => None,
+        };
 
         let clock = if cfg.real_time {
             Clock::real_scaled(cfg.time_scale)
@@ -484,6 +541,8 @@ impl Engine {
             tokens_generated: 0,
             steps_done: 0,
             degraded: 0,
+            store,
+            reused_prefix_tokens: 0,
         })
     }
 
@@ -525,6 +584,22 @@ impl Engine {
         }
         let wait = self.breakdown.get(Phase::IoWait).as_secs_f64();
         (1.0 - wait / busy).clamp(0.0, 1.0)
+    }
+
+    /// The engine's persistent store handle, if one is open (the router
+    /// caches this across waves so the store outlives any one engine).
+    pub fn store(&self) -> Option<Arc<PersistentStore>> {
+        self.store.clone()
+    }
+
+    /// Prompt tokens warm-started from the store instead of recomputed.
+    pub fn reused_prefix_tokens(&self) -> u64 {
+        self.reused_prefix_tokens
+    }
+
+    /// Current circuit-breaker state of the prefetch pipeline.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.prefetcher.breaker_state()
     }
 
     /// Total in-memory KV management bytes across sequences (Fig. 3a).
@@ -604,8 +679,76 @@ impl Engine {
             (0..self.spec.n_layers).map(|_| Tensor::zeros(&[b, hkv, pncap, d])).collect();
         let mut v_caches: Vec<Tensor> =
             (0..self.spec.n_layers).map(|_| Tensor::zeros(&[b, hkv, pncap, d])).collect();
+
+        // ---- warm start: restore the longest stored shared prefix ----
+        // Chunks run batch-wide, so the warm region is the *batch
+        // minimum* stored prefix, floored to the chunk size. The final
+        // chunk is always recomputed — prefill must produce the last
+        // activations for the first sampled token. Restored bytes are
+        // the exact f32 records a cold run would have placed in the
+        // caches, so every recomputed chunk is bit-identical.
+        let store = self.store.clone();
+        let mut reused = 0usize;
+        let mut pinned: Vec<u64> = Vec::new();
+        if let Some(store) = &store {
+            let mut matches = Vec::with_capacity(b);
+            let mut min_len = usize::MAX;
+            for p in prompts {
+                let Some(m) = store.lookup(p) else {
+                    min_len = 0;
+                    break;
+                };
+                min_len = min_len.min(m.tokens);
+                matches.push(m);
+            }
+            let mut l = if matches.len() == b {
+                (min_len / chunk) * chunk
+            } else {
+                0
+            };
+            if l >= s_len {
+                l -= chunk;
+            }
+            if l > 0 {
+                for m in &matches {
+                    store.pin(m.entry);
+                    pinned.push(m.entry);
+                }
+                let mut rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(b);
+                for m in &matches {
+                    match store.restore(m, l) {
+                        Ok(r) => rows.push(r),
+                        Err(e) => {
+                            // rung 4: a torn restore degrades to cold
+                            // prefill — correctness never depends on it
+                            crate::log_debug!("store restore failed ({e}); cold prefill");
+                            rows.clear();
+                            break;
+                        }
+                    }
+                }
+                if rows.len() == b {
+                    for (bi, layers) in rows.iter().enumerate() {
+                        for (layer, (k_rows, v_rows)) in layers.iter().enumerate() {
+                            for t in 0..l {
+                                for g in 0..hkv {
+                                    for dd in 0..d {
+                                        *k_caches[layer].at_mut(&[bi, g, t, dd]) =
+                                            k_rows[t * hd + g * d + dd];
+                                        *v_caches[layer].at_mut(&[bi, g, t, dd]) =
+                                            v_rows[t * hd + g * d + dd];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    reused = l;
+                }
+            }
+        }
+
         let mut x_last = Tensor::zeros(&[b, self.spec.d_model]);
-        for c0 in (0..s_len).step_by(chunk) {
+        for c0 in (reused..s_len).step_by(chunk) {
             let mut toks = Vec::with_capacity(b * chunk);
             for p in prompts {
                 toks.extend_from_slice(&p[c0..c0 + chunk]);
@@ -645,8 +788,10 @@ impl Engine {
             }
         }
 
-        // ingest caches as token-major rows
+        // ingest caches as token-major rows; with a store open, keep the
+        // rows to persist this prompt for future cross-request reuse
         for bi in 0..b {
+            let mut layer_rows: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
             for layer in 0..self.spec.n_layers {
                 let mut k_rows = vec![0.0f32; s_len * hd];
                 let mut v_rows = vec![0.0f32; s_len * hd];
@@ -659,15 +804,87 @@ impl Engine {
                     }
                 }
                 self.ingest_layer_rows(bi, layer, &k_rows, &v_rows)?;
+                if store.is_some() {
+                    layer_rows.push((k_rows, v_rows));
+                }
+            }
+            if let Some(store) = &store {
+                // a failed save is a lost optimization, not an error
+                if let Err(e) = store.save(&prompts[bi], &layer_rows) {
+                    crate::log_debug!("store save failed for seq {bi}: {e}");
+                }
             }
             self.seqs[bi].pos = s_len;
             self.seqs[bi].kv.n_tokens = s_len;
         }
+        if let Some(store) = &store {
+            for key in pinned {
+                store.unpin(key);
+            }
+        }
+        self.reused_prefix_tokens += (reused * b) as u64;
         let (first, _) = self.mr.logits_argmax(x_last)?;
         for (bi, &t) in first.iter().enumerate() {
             self.seqs[bi].last_token = t;
         }
         Ok(first)
+    }
+
+    /// Persist every sequence's flushed KV groups into the store under a
+    /// deterministic pseudo-prompt derived from `(seed, slot)` — the
+    /// synthetic-ingest analogue of a prefill save, so `run`-style
+    /// workloads exercise the persistence path (and a later process with
+    /// the same seed restores them). Returns sequences saved.
+    pub fn persist_synthetic(&mut self) -> anyhow::Result<usize> {
+        let Some(store) = self.store.clone() else {
+            return Ok(0);
+        };
+        if self.cfg.policy.memory_resident() {
+            return Ok(0); // nothing on disk to read back
+        }
+        let g = self.manager.cfg.group;
+        let hd = self.spec.kv_flat_dim();
+        let payload = self.manager.layout.group_payload_bytes() as usize;
+        let vocab = self.spec.vocab;
+        let mut saved = 0usize;
+        'seqs: for i in 0..self.seqs.len() {
+            let groups = (0..self.spec.n_layers)
+                .map(|l| self.manager.n_groups(&self.seqs[i].kv, l))
+                .min()
+                .unwrap_or(0);
+            let n = groups * g;
+            if n == 0 {
+                continue;
+            }
+            let mut rng = Rng::new(self.cfg.seed ^ ((i as u64) << 20) ^ 0x5704E);
+            let tokens: Vec<i32> = (0..n).map(|_| rng.below(vocab) as i32).collect();
+            let mut layer_rows = Vec::with_capacity(self.spec.n_layers);
+            for layer in 0..self.spec.n_layers {
+                let mut k_rows = Vec::with_capacity(n * hd);
+                let mut v_rows = Vec::with_capacity(n * hd);
+                for gi in 0..groups {
+                    let off = self
+                        .manager
+                        .layout
+                        .offset(self.seqs[i].kv.seq_slot, layer, gi);
+                    let mut buf = vec![0u8; payload];
+                    if let Err(e) = self.disk.read(off, &mut buf) {
+                        crate::log_debug!(
+                            "persist: seq {i} layer {layer} group {gi} unreadable ({e}); skipping"
+                        );
+                        continue 'seqs;
+                    }
+                    let (k, v) = self.manager.layout.decode_group(&buf);
+                    k_rows.extend_from_slice(&k);
+                    v_rows.extend_from_slice(&v);
+                }
+                layer_rows.push((k_rows, v_rows));
+            }
+            if store.save(&tokens, &layer_rows)? > 0 {
+                saved += 1;
+            }
+        }
+        Ok(saved)
     }
 
     /// Overwrite the KV entry at `token_pos` in every layer (NIAH
@@ -795,6 +1012,7 @@ impl Engine {
                 mean_overlap: self.mean_overlap(),
                 prefetch: self.prefetcher.summary(),
                 degraded_steps: self.degraded,
+                reused_prefix_tokens: self.reused_prefix_tokens,
             },
             xs,
             token_hist,
@@ -1531,6 +1749,36 @@ mod tests {
         assert!(cfg.fault.enabled());
         assert_eq!(cfg.retry.max_retries, 5);
         assert!(!EngineConfig::default().fault.enabled());
+    }
+
+    #[test]
+    fn builder_validates_store_knobs() {
+        // disabled store: knobs are ignored (defaults must keep passing)
+        assert!(EngineConfig::builder().build().is_ok());
+        let s = StoreConfig {
+            enabled: true,
+            capacity_bytes: 0,
+            ..StoreConfig::default()
+        };
+        assert!(EngineConfig::builder().store(s).build().is_err());
+        let s = StoreConfig {
+            enabled: true,
+            scrub_budget: 0,
+            ..StoreConfig::default()
+        };
+        assert!(EngineConfig::builder().store(s).build().is_err());
+        let s = StoreConfig {
+            scrub_interval_s: f64::NAN,
+            ..StoreConfig::default()
+        };
+        assert!(EngineConfig::builder().store(s).build().is_err());
+        // a sound enabled store passes
+        let s = StoreConfig {
+            enabled: true,
+            ..StoreConfig::default()
+        };
+        let cfg = EngineConfig::builder().store(s).build().unwrap();
+        assert!(cfg.store.enabled);
     }
 
     #[test]

@@ -6,12 +6,15 @@
 //! batches them (Batcher), runs prefill + decode waves, and returns
 //! `Completion`s. Used by the TCP server example and the serve command.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Engine, EngineConfig};
 use crate::runtime::{Manifest, PjrtRuntime};
+use crate::store::PersistentStore;
+use crate::util::json::Json;
 use crate::workload::tracegen::{prompt_tokens, Request};
 
 #[derive(Debug, Clone, PartialEq)]
@@ -25,7 +28,32 @@ pub struct Completion {
 enum RouterMsg {
     Submit(Request),
     Flush,
+    /// Reply with a health/stats snapshot (breaker state, overlap,
+    /// degradations, persistent-store counters) for the serve API.
+    Stats(Sender<Json>),
     Stop,
+}
+
+/// Snapshot the engine thread replies with on `RouterMsg::Stats`.
+fn stats_json(last_wave: &Option<Json>, store: Option<&Arc<PersistentStore>>) -> Json {
+    let mut j = match last_wave {
+        Some(w) => w.clone(),
+        None => Json::from_pairs(vec![
+            ("breaker", "closed".into()),
+            ("io_overlap_ratio", 0.0f64.into()),
+            ("degraded_steps", 0usize.into()),
+            ("reused_prefix_tokens", 0usize.into()),
+        ]),
+    };
+    match store {
+        Some(s) => {
+            j.set("store", s.counters().to_json());
+        }
+        None => {
+            j.set("store", Json::Null);
+        }
+    }
+    j
 }
 
 pub struct Router {
@@ -53,13 +81,24 @@ impl Router {
                 let mut arrivals: std::collections::HashMap<u64, Instant> =
                     std::collections::HashMap::new();
                 let mut flushing = false;
+                // The persistent store outlives the per-wave engines: the
+                // first wave opens it (when enabled), later waves share it
+                // so cross-request prefix reuse spans the whole session.
+                let mut store: Option<Arc<PersistentStore>> = None;
+                let mut last_wave: Option<Json> = None;
                 loop {
-                    // drain control messages (block only when queue empty
-                    // and not flushing)
+                    // drain control messages (wait with a timeout when the
+                    // queue is empty so idle gaps fund store maintenance)
                     let msg = if batcher.queue_len() == 0 && !flushing {
-                        match req_rx.recv() {
+                        match req_rx.recv_timeout(Duration::from_millis(100)) {
                             Ok(m) => Some(m),
-                            Err(_) => break,
+                            Err(RecvTimeoutError::Timeout) => {
+                                if let Some(s) = &store {
+                                    s.maintain(Instant::now());
+                                }
+                                continue;
+                            }
+                            Err(RecvTimeoutError::Disconnected) => break,
                         }
                     } else {
                         req_rx.try_recv().ok()
@@ -71,6 +110,10 @@ impl Router {
                             continue; // look for more queued submissions
                         }
                         Some(RouterMsg::Flush) => flushing = true,
+                        Some(RouterMsg::Stats(reply)) => {
+                            let _ = reply.send(stats_json(&last_wave, store.as_ref()));
+                            continue;
+                        }
                         Some(RouterMsg::Stop) => break,
                         None => {}
                     }
@@ -90,7 +133,7 @@ impl Router {
                     // the longest, multiple of the prefill chunk)
                     let mut cfg = engine_cfg.clone();
                     cfg.batch = wave.batch;
-                    let mut engine = Engine::new(rt.clone(), cfg)?;
+                    let mut engine = Engine::with_store(rt.clone(), cfg, store.clone())?;
                     let chunk = rt.manifest.presets[&engine_cfg.preset].prefill_chunk;
                     let vocab = rt.manifest.presets[&engine_cfg.preset].spec.vocab;
                     let ctx_max = wave
@@ -115,7 +158,19 @@ impl Router {
                     }
                     let first = engine.prefill(&prompts)?;
                     let steps = wave.requests.iter().map(|r| r.decode).max().unwrap_or(1);
-                    let (_, _, tok_hist) = engine.decode(steps.saturating_sub(1), false, None)?;
+                    let (stats, _, tok_hist) = engine.decode(steps.saturating_sub(1), false, None)?;
+                    if store.is_none() {
+                        store = engine.store();
+                    }
+                    last_wave = Some(Json::from_pairs(vec![
+                        ("breaker", engine.breaker_state().name().into()),
+                        ("io_overlap_ratio", engine.io_overlap_ratio().into()),
+                        ("degraded_steps", (stats.degraded_steps as usize).into()),
+                        (
+                            "reused_prefix_tokens",
+                            (stats.reused_prefix_tokens as usize).into(),
+                        ),
+                    ]));
 
                     for (row, req) in wave.requests.iter().enumerate() {
                         let mut tokens = vec![first[row]];
@@ -156,6 +211,16 @@ impl Router {
     /// Dispatch all queued requests without waiting for full batches.
     pub fn flush(&self) {
         let _ = self.tx.send(RouterMsg::Flush);
+    }
+
+    /// Health/stats snapshot from the engine thread: circuit-breaker
+    /// state, I/O overlap ratio, degraded steps, reused prefix tokens,
+    /// and persistent-store counters (`store: null` when disabled).
+    /// `None` when the engine thread is gone or busy past the timeout.
+    pub fn stats(&self) -> Option<Json> {
+        let (reply_tx, reply_rx) = channel::<Json>();
+        self.tx.send(RouterMsg::Stats(reply_tx)).ok()?;
+        reply_rx.recv_timeout(Duration::from_secs(600)).ok()
     }
 
     pub fn recv(&self) -> Option<Completion> {

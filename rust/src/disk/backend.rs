@@ -198,6 +198,24 @@ impl FileBackend {
             len: Mutex::new(0),
         })
     }
+
+    /// Open an existing data file *without truncating it* (creating it
+    /// empty if absent). This is the persistence path: the KV store's
+    /// records must survive process restarts, so reopening the backing
+    /// file has to preserve the bytes `create` would wipe.
+    pub fn open<P: AsRef<Path>>(path: P) -> DiskResult<FileBackend> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .map_err(|e| DiskError::io(e, 0, 0))?;
+        let len = file.metadata().map(|m| m.len()).unwrap_or(0);
+        Ok(FileBackend {
+            file,
+            len: Mutex::new(len),
+        })
+    }
 }
 
 impl Backend for FileBackend {

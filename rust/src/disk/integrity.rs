@@ -64,14 +64,26 @@ impl IntegrityMap {
         if data.is_empty() {
             return;
         }
-        let sum = fnv1a64(data);
-        let len = data.len() as u64;
+        self.stamp_sum(offset, data.len(), fnv1a64(data));
+    }
+
+    /// Record a checksum computed elsewhere — e.g. reloaded from the
+    /// persistent store's manifest on open — as the truth for extent
+    /// `(offset, len)`, with the same overlap invalidation as
+    /// [`IntegrityMap::stamp`]. Reads of the extent then verify against
+    /// the *historical* write, which is exactly what a reopened store
+    /// needs: bytes that rotted while the process was down must fail.
+    pub fn stamp_sum(&self, offset: u64, len: usize, sum: u64) {
+        if len == 0 {
+            return;
+        }
+        let len64 = len as u64;
         let mut inner = relock(&self.inner);
         // Any stamped extent starting within `max_len` before us may reach
         // into [offset, offset+len); everything starting inside the write
         // certainly overlaps.
         let lo = offset.saturating_sub(inner.max_len);
-        let hi = offset.saturating_add(len);
+        let hi = offset.saturating_add(len64);
         let stale: Vec<u64> = inner
             .by_offset
             .range(lo..hi)
@@ -81,8 +93,8 @@ impl IntegrityMap {
         for o in stale {
             inner.by_offset.remove(&o);
         }
-        inner.max_len = inner.max_len.max(len);
-        inner.by_offset.insert(offset, (data.len(), sum));
+        inner.max_len = inner.max_len.max(len64);
+        inner.by_offset.insert(offset, (len, sum));
     }
 
     /// Verify `bytes` read back from `offset` against the stamped
@@ -157,6 +169,26 @@ mod tests {
         // same offset, different length (e.g. a whole-layer read): skip
         m.verify(0, &[9u8; 32]).unwrap();
         assert!(!m.is_stamped(0, 32));
+    }
+
+    #[test]
+    fn stamp_sum_behaves_like_stamp() {
+        let m = IntegrityMap::new();
+        let rec = vec![0x3Cu8; 128];
+        // re-stamping from a persisted checksum (manifest reopen path)
+        // verifies identically to stamping the bytes directly
+        m.stamp_sum(512, rec.len(), fnv1a64(&rec));
+        assert!(m.is_stamped(512, 128));
+        m.verify(512, &rec).unwrap();
+        let mut bad = rec.clone();
+        bad[0] ^= 1;
+        assert!(m.verify(512, &bad).is_err());
+        // and it carries the same overlap invalidation
+        m.stamp(600, &[7u8; 64]);
+        m.stamp_sum(560, 80, 42);
+        assert!(!m.is_stamped(512, 128));
+        assert!(!m.is_stamped(600, 64));
+        assert!(m.is_stamped(560, 80));
     }
 
     #[test]

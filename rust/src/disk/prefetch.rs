@@ -210,6 +210,17 @@ pub enum BreakerState {
     HalfOpen,
 }
 
+impl BreakerState {
+    /// Stable lower-case label for logs and the serve `stats` line.
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
 /// Consecutive-failure breaker with half-open probing. Not a separate
 /// thread — driven entirely by `submit` (routing) and `recv` (outcomes),
 /// so it adds no synchronization to the hot path.

@@ -35,6 +35,18 @@
 //! path: plans are submitted while earlier layers compute, and
 //! `Phase::IoWait` measures only the residual stall. Engine configs are
 //! built with the validating [`coordinator::EngineConfig::builder`].
+//!
+//! ## Persistent KV store
+//!
+//! The working cache above dies with the process; the [`store`]
+//! subsystem persists prefill results across requests *and* restarts. A
+//! versioned manifest (atomic temp+rename writes, per-record checksums
+//! re-armed into the [`disk::IntegrityMap`] on open) maps token-prefix
+//! hash chains to disk extents; a boundary-hash index finds the longest
+//! stored prefix so the engine warm-starts prefill at the divergence
+//! point, bit-identical to recompute; LRU eviction with pinning bounds
+//! capacity; and a deadline/idle-budget maintainer scrubs records,
+//! persisting corruption sites and quarantining poisoned entries.
 
 pub mod util;
 pub mod config;
@@ -42,6 +54,7 @@ pub mod disk;
 pub mod runtime;
 pub mod kvcache;
 pub mod predictor;
+pub mod store;
 pub mod coordinator;
 pub mod baselines;
 pub mod tuner;

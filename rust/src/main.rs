@@ -10,11 +10,19 @@
 //! Examples:
 //!   kvswap run --policy kvswap --batch 4 --context 2048 --steps 64 --disk nvme
 //!   kvswap run --policy kvswap --fault-rate 0.05 --fault-seed 7 --io-retries 5
+//!   kvswap run --policy kvswap --store-dir /tmp/kv-store --store-capacity 256
 //!   kvswap tune --budget-mib 2 --disk emmc --out kvswap_tuned.json
 //!   kvswap serve --addr 127.0.0.1:7777 --policy kvswap --disk nvme
+//!
+//! Persistent-store flags (run/serve/quality):
+//!   --store-dir PATH            persist the cross-request KV store here
+//!   --store-mem                 enable the store on an in-memory backend
+//!   --store-capacity MIB        store capacity before LRU eviction (256)
+//!   --store-scrub-interval SEC  maintenance scrub deadline (5.0)
+//!   --store-scrub-budget N      entries scrubbed per idle slice (4)
 
 use kvswap::baselines::{configure, Budget};
-use kvswap::config::{FaultConfig, KvSwapConfig, PrefetchConfig, RetryConfig};
+use kvswap::config::{FaultConfig, KvSwapConfig, PrefetchConfig, RetryConfig, StoreConfig};
 use kvswap::coordinator::batcher::BatcherConfig;
 use kvswap::coordinator::router::Router;
 use kvswap::coordinator::{Engine, EngineConfig, Policy};
@@ -92,6 +100,18 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
         seed: args.u64_or("fault-seed", 0),
         persistent: args.flag("fault-persistent"),
     };
+    let store_default = StoreConfig::default();
+    let store = StoreConfig {
+        enabled: args.get("store-dir").is_some() || args.flag("store-mem"),
+        dir: args.get("store-dir").map(std::path::PathBuf::from),
+        capacity_bytes: (args.f64_or(
+            "store-capacity",
+            store_default.capacity_bytes as f64 / (1024.0 * 1024.0),
+        ) * 1024.0
+            * 1024.0) as u64,
+        scrub_interval_s: args.f64_or("store-scrub-interval", store_default.scrub_interval_s),
+        scrub_budget: args.usize_or("store-scrub-budget", store_default.scrub_budget),
+    };
     let retry_default = RetryConfig::default();
     let retry = RetryConfig {
         max_retries: args.u64_or("io-retries", retry_default.max_retries as u64) as u32,
@@ -111,6 +131,7 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
         .prefetch(prefetch)
         .fault(fault)
         .retry(retry)
+        .store(store)
         .real_time(args.flag("real-time"))
         .time_scale(args.f64_or("time-scale", 1.0))
         .max_context(args.usize_or("max-context", args.usize_or("context", 2048)))
@@ -167,6 +188,36 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "management memory: {}",
         kvswap::util::fmt_bytes(engine.management_bytes())
     );
+    // Exercise the persistent store when enabled: persist this run's KV,
+    // then run a full scrub pass so fault-injection runs cover the
+    // detect → record → quarantine path end to end.
+    if let Some(store) = engine.store() {
+        let saved = engine.persist_synthetic()?;
+        let report = store.scrub_now(usize::MAX);
+        let c = store.counters();
+        println!(
+            "store: {} entries ({} used / {} capacity), {} persisted this run",
+            store.entries(),
+            kvswap::util::fmt_bytes(store.stored_bytes()),
+            kvswap::util::fmt_bytes(store.capacity_bytes()),
+            saved
+        );
+        println!(
+            "store scrub: {} records scanned, {} corrupt, {} healed, {} quarantined",
+            report.records_clean + report.corruptions,
+            report.corruptions,
+            report.healed,
+            report.quarantined
+        );
+        println!(
+            "store counters: {} hits, {} misses, {} saves, {} evictions, {} corruption sites",
+            c.hits,
+            c.misses,
+            c.saves,
+            c.evictions,
+            store.corruption_sites().len()
+        );
+    }
     println!("latency breakdown:\n{}", stats.breakdown.report());
     Ok(())
 }

@@ -129,6 +129,10 @@ pub struct DecodeStats {
     /// because their staged load was unrecoverable (degradation rung 4 —
     /// see `disk` module docs). 0 on a healthy device.
     pub degraded_steps: u64,
+    /// Prompt tokens restored from the persistent KV store instead of
+    /// recomputed during prefill (summed over batch rows). 0 when the
+    /// store is disabled or no request shared a stored prefix.
+    pub reused_prefix_tokens: u64,
 }
 
 impl DecodeStats {
@@ -238,6 +242,7 @@ mod tests {
             mean_overlap: 0.7,
             prefetch: PrefetchSummary::default(),
             degraded_steps: 0,
+            reused_prefix_tokens: 0,
         };
         assert!((s.tokens_per_sec() - 25.0).abs() < 1e-9);
     }

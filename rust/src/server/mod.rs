@@ -5,6 +5,11 @@
 //!            "tokens": [...])
 //! Response: {"id": 1, "tokens": [...], "latency_ms": 12.3, "batch": 4}
 //!
+//! Control lines: "flush" dispatches queued requests immediately,
+//! "stats" returns a one-line health JSON (circuit-breaker state,
+//! io_overlap_ratio, degraded_steps, persistent-store counters), and
+//! "quit" ends the connection.
+//!
 //! The server forwards to the `Router` (engine thread) and streams
 //! completions back on the same connection.
 
@@ -17,12 +22,34 @@ use crate::workload::tracegen::Request;
 
 pub fn parse_request(line: &str, fallback_id: u64) -> Result<Request, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let tokens = match j.get("tokens") {
+        None | Some(Json::Null) => None,
+        Some(t) => {
+            let arr = t.as_arr().ok_or_else(|| "tokens must be an array".to_string())?;
+            let mut toks = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                let n = v
+                    .as_f64()
+                    .filter(|f| f.fract() == 0.0 && f.is_finite())
+                    .ok_or_else(|| format!("tokens[{i}] must be an integer"))?;
+                toks.push(n as i32);
+            }
+            Some(toks)
+        }
+    };
+    // Explicit tokens pin the context length; "context" only sizes the
+    // seeded synthetic prompt.
+    let context = match &tokens {
+        Some(t) => t.len(),
+        None => j.usize_or("context", 512),
+    };
     Ok(Request {
         id: j.usize_or("id", fallback_id as usize) as u64,
-        context: j.usize_or("context", 512),
+        context,
         decode: j.usize_or("decode", 16),
         arrival_s: 0.0,
         seed: j.usize_or("seed", fallback_id as usize) as u64,
+        tokens,
     })
 }
 
@@ -55,6 +82,16 @@ pub fn handle_conn(stream: TcpStream, router: &Router) -> anyhow::Result<usize> 
         }
         if trimmed == "flush" {
             router.flush();
+            continue;
+        }
+        if trimmed == "stats" {
+            match router.stats() {
+                Some(j) => writeln!(out, "{j}")?,
+                None => {
+                    let err = Json::from_pairs(vec![("error", "stats unavailable".into())]);
+                    writeln!(out, "{err}")?;
+                }
+            }
             continue;
         }
         match parse_request(trimmed, i as u64) {
@@ -108,10 +145,58 @@ mod tests {
         assert_eq!(r.context, 256);
         assert_eq!(r.decode, 8);
         assert_eq!(r.seed, 9);
+        assert_eq!(r.tokens, None);
         let d = parse_request("{}", 42).unwrap();
         assert_eq!(d.id, 42);
         assert_eq!(d.context, 512);
         assert!(parse_request("not json", 0).is_err());
+    }
+
+    #[test]
+    fn parse_request_malformed_json() {
+        // truncated object, bare value, and trailing garbage all fail
+        // without panicking
+        assert!(parse_request("{", 0).is_err());
+        assert!(parse_request(r#"{"id": }"#, 0).is_err());
+        assert!(parse_request("", 0).is_err());
+    }
+
+    #[test]
+    fn parse_request_explicit_tokens() {
+        let r = parse_request(r#"{"id": 1, "tokens": [5, 6, 7], "decode": 4}"#, 0).unwrap();
+        assert_eq!(r.tokens, Some(vec![5, 6, 7]));
+        // explicit tokens pin context to their length, overriding any
+        // "context" field
+        assert_eq!(r.context, 3);
+        let r2 = parse_request(r#"{"tokens": [1, 2], "context": 999}"#, 0).unwrap();
+        assert_eq!(r2.context, 2);
+        // JSON null is the same as absent
+        let r3 = parse_request(r#"{"tokens": null, "context": 64}"#, 0).unwrap();
+        assert_eq!(r3.tokens, None);
+        assert_eq!(r3.context, 64);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_tokens_payloads() {
+        // non-array tokens
+        assert!(parse_request(r#"{"tokens": 5}"#, 0).is_err());
+        assert!(parse_request(r#"{"tokens": "abc"}"#, 0).is_err());
+        // non-integer entries
+        assert!(parse_request(r#"{"tokens": [1, "a", 3]}"#, 0).is_err());
+        assert!(parse_request(r#"{"tokens": [1.5]}"#, 0).is_err());
+        // empty array is legal (zero-length prompt, padded by the wave)
+        let r = parse_request(r#"{"tokens": []}"#, 0).unwrap();
+        assert_eq!(r.tokens, Some(vec![]));
+        assert_eq!(r.context, 0);
+    }
+
+    #[test]
+    fn parse_request_missing_field_fallbacks() {
+        let r = parse_request(r#"{"context": 128}"#, 7).unwrap();
+        assert_eq!(r.id, 7); // fallback id
+        assert_eq!(r.seed, 7); // seed falls back to the same line id
+        assert_eq!(r.decode, 16);
+        assert_eq!(r.context, 128);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Token-prefix hash-chain index for the persistent KV store.
+//!
+//! The store keys entries by an incremental FNV-1a hash over the prompt
+//! tokens (the *chain hash*). Because K/V rows at position `t` depend
+//! only on tokens `<= t`, a stored entry of `N` tokens can serve any
+//! request that shares a group-aligned prefix with it — so the index
+//! registers the chain hash at **every full-group boundary** of each
+//! entry, and a lookup walks the request's own boundary hashes from the
+//! longest down until one is registered.
+//!
+//! Hashes are 64-bit and non-cryptographic, so the index only *nominates*
+//! candidates; the store confirms each one by comparing the actual token
+//! prefix before restoring bytes (a collision must never replay someone
+//! else's KV).
+
+use std::collections::HashMap;
+
+/// Incremental FNV-1a over token little-endian bytes. Feeding tokens one
+/// at a time yields exactly `fnv1a64(concat(token.to_le_bytes()))`, so a
+/// lookup can hash the request prompt once, capturing the running state
+/// at every group boundary for free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainHasher {
+    state: u64,
+}
+
+impl Default for ChainHasher {
+    fn default() -> ChainHasher {
+        ChainHasher::new()
+    }
+}
+
+impl ChainHasher {
+    pub fn new() -> ChainHasher {
+        ChainHasher {
+            state: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    pub fn push(&mut self, token: i32) {
+        for b in token.to_le_bytes() {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Chain hash of a whole token slice (the store's entry key).
+pub fn chain_hash(tokens: &[i32]) -> u64 {
+    let mut h = ChainHasher::new();
+    for &t in tokens {
+        h.push(t);
+    }
+    h.finish()
+}
+
+/// boundary hash → entries whose prefix reaches that boundary, as
+/// `(entry_key, prefix_len)` pairs.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    by_boundary: HashMap<u64, Vec<(u64, usize)>>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Register `entry` (keyed by `key = chain_hash(tokens)`) under the
+    /// chain hash of every full-group boundary of `tokens`.
+    pub fn insert(&mut self, key: u64, tokens: &[i32], group: usize) {
+        assert!(group > 0, "group size must be positive");
+        let mut h = ChainHasher::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            h.push(t);
+            if (i + 1) % group == 0 {
+                self.by_boundary
+                    .entry(h.finish())
+                    .or_default()
+                    .push((key, i + 1));
+            }
+        }
+    }
+
+    /// Remove every boundary registration of `entry` (mirror of
+    /// [`PrefixIndex::insert`] — must be called with the same tokens).
+    pub fn remove(&mut self, key: u64, tokens: &[i32], group: usize) {
+        let mut h = ChainHasher::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            h.push(t);
+            if (i + 1) % group == 0 {
+                let boundary = h.finish();
+                if let Some(v) = self.by_boundary.get_mut(&boundary) {
+                    v.retain(|&(k, l)| !(k == key && l == i + 1));
+                    if v.is_empty() {
+                        self.by_boundary.remove(&boundary);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Candidate `(entry_key, prefix_len)` pairs for the longest stored
+    /// group-aligned prefix of `tokens`, longest first. The caller must
+    /// confirm each candidate against the entry's actual tokens.
+    pub fn candidates(&self, tokens: &[i32], group: usize) -> Vec<(u64, usize)> {
+        assert!(group > 0, "group size must be positive");
+        let mut boundaries = Vec::new();
+        let mut h = ChainHasher::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            h.push(t);
+            if (i + 1) % group == 0 {
+                boundaries.push((h.finish(), i + 1));
+            }
+        }
+        let mut out = Vec::new();
+        for &(boundary, len) in boundaries.iter().rev() {
+            if let Some(v) = self.by_boundary.get(&boundary) {
+                out.extend(v.iter().filter(|&&(_, l)| l == len).map(|&(k, _)| (k, len)));
+            }
+        }
+        out
+    }
+
+    /// Number of registered boundaries (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.by_boundary.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_boundary.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disk::fnv1a64;
+
+    #[test]
+    fn chain_hash_matches_flat_fnv_over_le_bytes() {
+        let tokens = [3i32, -7, 65536, 0];
+        let mut flat = Vec::new();
+        for t in tokens {
+            flat.extend_from_slice(&t.to_le_bytes());
+        }
+        assert_eq!(chain_hash(&tokens), fnv1a64(&flat));
+        // incremental == one-shot
+        let mut h = ChainHasher::new();
+        for t in tokens {
+            h.push(t);
+        }
+        assert_eq!(h.finish(), chain_hash(&tokens));
+    }
+
+    #[test]
+    fn longest_boundary_match_wins() {
+        let mut idx = PrefixIndex::new();
+        let stored: Vec<i32> = (0..16).collect();
+        let key = chain_hash(&stored);
+        idx.insert(key, &stored, 4);
+        assert_eq!(idx.len(), 4); // boundaries at 4, 8, 12, 16
+
+        // identical prompt: full-length candidate first
+        let c = idx.candidates(&stored, 4);
+        assert_eq!(c.first(), Some(&(key, 16)));
+
+        // diverges after 8 tokens: best candidate is the 8-boundary
+        let mut fork = stored.clone();
+        fork[9] = 99;
+        let c = idx.candidates(&fork, 4);
+        assert_eq!(c.first(), Some(&(key, 8)));
+
+        // longer prompt sharing the whole entry: capped at entry length
+        let mut long: Vec<i32> = stored.clone();
+        long.extend(100..108);
+        let c = idx.candidates(&long, 4);
+        assert_eq!(c.first(), Some(&(key, 16)));
+
+        // disjoint prompt: nothing
+        let other: Vec<i32> = (100..116).collect();
+        assert!(idx.candidates(&other, 4).is_empty());
+    }
+
+    #[test]
+    fn remove_unregisters_all_boundaries() {
+        let mut idx = PrefixIndex::new();
+        let a: Vec<i32> = (0..8).collect();
+        let b: Vec<i32> = (0..12).collect(); // shares a's boundaries at 4 and 8
+        idx.insert(chain_hash(&a), &a, 4);
+        idx.insert(chain_hash(&b), &b, 4);
+        assert_eq!(idx.len(), 5);
+        idx.remove(chain_hash(&a), &a, 4);
+        assert_eq!(idx.len(), 3);
+        // b still resolves through the shared boundaries
+        let c = idx.candidates(&a, 4);
+        assert_eq!(c.first(), Some(&(chain_hash(&b), 8)));
+        idx.remove(chain_hash(&b), &b, 4);
+        assert!(idx.is_empty());
+    }
+}

@@ -1,0 +1,317 @@
+//! Versioned, atomically-persisted manifest for the KV store.
+//!
+//! The manifest is the store's single source of truth: which prompts are
+//! stored, which disk slot each occupies, the per-record checksums that
+//! re-arm the [`IntegrityMap`] on reopen, and the persisted corruption
+//! log. It is rewritten in full on every mutation via the classic
+//! temp-file + `sync_all` + `rename` dance, so a crash at any byte
+//! leaves either the old manifest or the new one — never a torn file.
+//! Conversely, a leftover `manifest.json.tmp` on open is *by definition*
+//! an unpublished partial write and is discarded.
+//!
+//! Loading is lenient where it must be (an unreadable or mismatched
+//! manifest starts the store clean rather than wedging the engine) and
+//! strict where it matters (entry keys are **recomputed** from the
+//! stored tokens, never trusted from the file; geometry must match the
+//! engine's [`DiskLayout`] exactly or every slot arithmetic would lie).
+//!
+//! [`IntegrityMap`]: crate::disk::IntegrityMap
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::index::chain_hash;
+use super::maintain::CorruptionSite;
+use crate::kvcache::DiskLayout;
+use crate::util::json::Json;
+
+pub const MANIFEST_VERSION: u64 = 1;
+pub const MANIFEST_FILE: &str = "manifest.json";
+pub const MANIFEST_TMP: &str = "manifest.json.tmp";
+/// Backing data file living next to the manifest in the store dir.
+pub const DATA_FILE: &str = "store.bin";
+
+/// One stored prompt: its tokens (always a whole number of groups), the
+/// disk slot its records occupy, and the write-time checksum of every
+/// record, layer-major (`layer * n_groups + group`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreEntry {
+    pub tokens: Vec<i32>,
+    pub slot: usize,
+    pub last_used: u64,
+    pub checksums: Vec<u64>,
+}
+
+impl StoreEntry {
+    pub fn n_groups(&self, group: usize) -> usize {
+        self.tokens.len() / group
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreManifest {
+    pub version: u64,
+    /// Geometry fingerprint — must equal the engine layout on open.
+    pub hd: usize,
+    pub group: usize,
+    pub n_layers: usize,
+    pub page_align: usize,
+    /// LRU logical clock high-water mark (see `evict::Lru`).
+    pub clock: u64,
+    /// entry key (= `chain_hash(tokens)`) → entry.
+    pub entries: HashMap<u64, StoreEntry>,
+    /// Confirmed-bad records, persisted for post-mortem.
+    pub corruption_log: Vec<CorruptionSite>,
+}
+
+impl StoreManifest {
+    pub fn new(layout: &DiskLayout) -> StoreManifest {
+        StoreManifest {
+            version: MANIFEST_VERSION,
+            hd: layout.hd,
+            group: layout.group,
+            n_layers: layout.n_layers,
+            page_align: layout.page_align,
+            clock: 0,
+            entries: HashMap::new(),
+            corruption_log: Vec::new(),
+        }
+    }
+
+    /// Whether the persisted geometry matches the engine's layout. A
+    /// mismatch (model change, layout refactor) invalidates every slot
+    /// offset and checksum, so the caller must start clean.
+    pub fn matches(&self, layout: &DiskLayout) -> bool {
+        self.hd == layout.hd
+            && self.group == layout.group
+            && self.n_layers == layout.n_layers
+            && self.page_align == layout.page_align
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(&u64, &StoreEntry)> = self.entries.iter().collect();
+        entries.sort_by_key(|e| *e.0); // stable output for diffing
+        let entries = entries
+            .into_iter()
+            .map(|(&key, e)| {
+                Json::from_pairs(vec![
+                    // debugging aid only; load recomputes from tokens
+                    ("hash", format!("{key:016x}").into()),
+                    ("slot", e.slot.into()),
+                    ("last_used", (e.last_used as usize).into()),
+                    (
+                        "tokens",
+                        Json::Arr(e.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    ),
+                    (
+                        // hex: record checksums use the full u64 range,
+                        // which a JSON (f64) number cannot hold exactly
+                        "checksums",
+                        Json::Arr(
+                            e.checksums
+                                .iter()
+                                .map(|&c| format!("{c:016x}").into())
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("version", (self.version as usize).into()),
+            (
+                "geometry",
+                Json::from_pairs(vec![
+                    ("hd", self.hd.into()),
+                    ("group", self.group.into()),
+                    ("n_layers", self.n_layers.into()),
+                    ("page_align", self.page_align.into()),
+                ]),
+            ),
+            ("clock", (self.clock as usize).into()),
+            ("entries", Json::Arr(entries)),
+            (
+                "corruption_log",
+                Json::Arr(self.corruption_log.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<StoreManifest> {
+        let geo = j
+            .get("geometry")
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing geometry"))?;
+        let group = geo.usize_or("group", 0);
+        anyhow::ensure!(group > 0, "manifest: geometry.group must be positive");
+        let mut entries = HashMap::new();
+        for ej in j.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+            let tokens_j = ej
+                .get("tokens")
+                .and_then(|t| t.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("manifest entry: missing tokens"))?;
+            let mut tokens = Vec::with_capacity(tokens_j.len());
+            for t in tokens_j {
+                let n = t
+                    .as_i64()
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry: non-integer token"))?;
+                tokens.push(n as i32);
+            }
+            let mut checksums = Vec::new();
+            for c in ej.get("checksums").and_then(|c| c.as_arr()).unwrap_or(&[]) {
+                let hex = c
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("manifest entry: checksum not a hex string"))?;
+                checksums.push(
+                    u64::from_str_radix(hex, 16)
+                        .map_err(|e| anyhow::anyhow!("manifest entry: bad checksum hex: {e}"))?,
+                );
+            }
+            // the key is derived, not trusted: a tampered or bit-rotted
+            // "hash" field cannot alias one prompt's KV onto another
+            let key = chain_hash(&tokens);
+            let entry = StoreEntry {
+                tokens,
+                slot: ej.usize_or("slot", 0),
+                last_used: ej.usize_or("last_used", 0) as u64,
+                checksums,
+            };
+            anyhow::ensure!(
+                entries.insert(key, entry).is_none(),
+                "manifest: duplicate entry for key {key:016x}"
+            );
+        }
+        let mut corruption_log = Vec::new();
+        for sj in j
+            .get("corruption_log")
+            .and_then(|c| c.as_arr())
+            .unwrap_or(&[])
+        {
+            corruption_log.push(CorruptionSite::from_json(sj)?);
+        }
+        Ok(StoreManifest {
+            version: j.usize_or("version", 0) as u64,
+            hd: geo.usize_or("hd", 0),
+            group,
+            n_layers: geo.usize_or("n_layers", 0),
+            page_align: geo.usize_or("page_align", 0),
+            clock: j.usize_or("clock", 0) as u64,
+            entries,
+            corruption_log,
+        })
+    }
+
+    /// Atomically publish the manifest into `dir`: write the temp file,
+    /// fsync it, then rename over the live file. A crash anywhere in the
+    /// sequence leaves a consistent manifest on disk.
+    pub fn persist(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(MANIFEST_TMP);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(self.to_json().to_string_pretty().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        Ok(())
+    }
+
+    /// Load the manifest from `dir`, or a clean one when `dir` holds
+    /// nothing usable. Leftover temp files (crash mid-persist) are
+    /// discarded first — their contents were never published.
+    pub fn load(dir: &Path, layout: &DiskLayout) -> StoreManifest {
+        let tmp = dir.join(MANIFEST_TMP);
+        if tmp.exists() {
+            crate::log_info!("store: discarding partial manifest write {}", tmp.display());
+            let _ = std::fs::remove_file(&tmp);
+        }
+        let path = dir.join(MANIFEST_FILE);
+        let Ok(src) = std::fs::read_to_string(&path) else {
+            return StoreManifest::new(layout);
+        };
+        let parsed = Json::parse(&src)
+            .ok()
+            .and_then(|j| StoreManifest::from_json(&j).ok());
+        match parsed {
+            Some(m) if m.version == MANIFEST_VERSION && m.matches(layout) => m,
+            Some(_) => {
+                crate::log_info!("store: manifest version/geometry mismatch; starting clean");
+                StoreManifest::new(layout)
+            }
+            None => {
+                crate::log_info!("store: unreadable manifest; starting clean");
+                StoreManifest::new(layout)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> DiskLayout {
+        DiskLayout::new(8, 4, 64, 2, 0)
+    }
+
+    fn sample(layout: &DiskLayout) -> StoreManifest {
+        let mut m = StoreManifest::new(layout);
+        let tokens: Vec<i32> = (0..8).collect();
+        m.clock = 9;
+        m.entries.insert(
+            chain_hash(&tokens),
+            StoreEntry {
+                tokens,
+                slot: 2,
+                last_used: 9,
+                checksums: vec![u64::MAX - 1, 0xfeed_f00d_dead_beef, 3, 4],
+            },
+        );
+        m.corruption_log.push(CorruptionSite {
+            entry: 0xabcd,
+            layer: 1,
+            group: 0,
+            offset: 256,
+            detail: "io".into(),
+            at: 5,
+        });
+        m
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = sample(&layout());
+        let back = StoreManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // checksums near u64::MAX survive the hex path bit-exactly
+        let e = back.entries.values().next().unwrap();
+        assert_eq!(e.checksums[0], u64::MAX - 1);
+    }
+
+    #[test]
+    fn persist_load_atomicity() {
+        let dir = std::env::temp_dir().join(format!("kvswap-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let la = layout();
+        let m = sample(&la);
+        m.persist(&dir).unwrap();
+        assert_eq!(StoreManifest::load(&dir, &la), m);
+        assert!(!dir.join(MANIFEST_TMP).exists());
+
+        // leftover temp file = crash mid-persist: discarded, live intact
+        std::fs::write(dir.join(MANIFEST_TMP), b"{\"version\": 1, \"entr").unwrap();
+        assert_eq!(StoreManifest::load(&dir, &la), m);
+        assert!(!dir.join(MANIFEST_TMP).exists());
+
+        // garbage live manifest: start clean, don't panic
+        std::fs::write(dir.join(MANIFEST_FILE), b"not json at all").unwrap();
+        assert!(StoreManifest::load(&dir, &la).entries.is_empty());
+
+        // geometry mismatch: start clean
+        m.persist(&dir).unwrap();
+        let other = DiskLayout::new(16, 4, 64, 2, 0);
+        assert!(StoreManifest::load(&dir, &other).entries.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,661 @@
+//! Persistent KV store: cross-request, cross-restart prefix reuse.
+//!
+//! KVSwap keeps the *working* KV cache on disk but it still dies with
+//! the process; every request re-runs prefill even when its prompt
+//! shares a long prefix with earlier traffic. This subsystem persists
+//! prefill results keyed by token-prefix hash chains so a later request
+//! — in this process or the next — restores the shared prefix from disk
+//! and starts prefill at the divergence point. Warm restores are
+//! **bit-identical** to recompute: records are raw f32 little-endian
+//! group encodings, exactly what the engine would have written.
+//!
+//! The pieces:
+//! - [`manifest`] — versioned, atomically-persisted source of truth
+//!   (temp + fsync + rename; leftover temp files are discarded as
+//!   unpublished partial writes);
+//! - [`index`] — boundary hash-chain index nominating the longest
+//!   stored group-aligned prefix, confirmed against actual tokens;
+//! - [`evict`] — capacity-bounded LRU with pinning for in-flight
+//!   restores;
+//! - [`maintain`] — deadline/idle-budget scrub scheduler with a
+//!   persisted corruption log.
+//!
+//! ## Failure model & degradation ladder
+//!
+//! Mirrors the disk pipeline (`disk/mod.rs`), adapted to data that must
+//! outlive the process:
+//!
+//! 1. **Detect** — every record's FNV-1a checksum is persisted in the
+//!    manifest and re-armed into the store's [`IntegrityMap`] on open,
+//!    so bytes that rotted *while the process was down* still fail
+//!    verification on first read. Entry keys are recomputed from
+//!    tokens, never trusted from the file.
+//! 2. **Retry** — a failed record read (restore or scrub) is re-issued
+//!    once: transient device faults heal; deterministic corruption
+//!    does not.
+//! 3. **Contain** — a record that stays bad quarantines its whole entry
+//!    (removed from index + LRU, slot recycled) and appends a
+//!    [`CorruptionSite`](maintain::CorruptionSite) to the manifest's
+//!    persisted corruption log for post-mortem. One poisoned prompt
+//!    never blocks the store.
+//! 4. **Degrade** — a failed restore falls back to cold prefill
+//!    (correctness never depends on the store); a failed save logs and
+//!    skips (the store is an accelerator, not a durability contract);
+//!    an over-capacity save with everything pinned skips rather than
+//!    evicting under a reader.
+//!
+//! [`IntegrityMap`]: crate::disk::IntegrityMap
+
+pub mod evict;
+pub mod index;
+pub mod maintain;
+pub mod manifest;
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::{FaultConfig, StoreConfig};
+use crate::disk::{
+    relock, Backend, DiskError, DiskProfile, FaultBackend, FileBackend, MemBackend, SimDisk,
+};
+use crate::kvcache::DiskLayout;
+use crate::util::json::Json;
+
+pub use evict::Lru;
+pub use index::{chain_hash, ChainHasher, PrefixIndex};
+pub use maintain::{CorruptionSite, Maintainer, ScrubReport};
+pub use manifest::{StoreEntry, StoreManifest, DATA_FILE, MANIFEST_FILE, MANIFEST_TMP};
+
+/// A confirmed stored prefix for an incoming prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// Entry key (pass to [`PersistentStore::pin`] /
+    /// [`PersistentStore::unpin`] around the restore).
+    pub entry: u64,
+    /// Number of prompt tokens covered (a multiple of the group size).
+    pub tokens: usize,
+}
+
+/// Monotonic event counters, surfaced over the serve `stats` line.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub restored_tokens: u64,
+    pub saves: u64,
+    pub save_skips: u64,
+    pub evictions: u64,
+    pub corruptions: u64,
+    pub healed: u64,
+    pub quarantined: u64,
+    pub scrub_passes: u64,
+    pub records_scrubbed: u64,
+}
+
+impl StoreCounters {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("hits", (self.hits as usize).into()),
+            ("misses", (self.misses as usize).into()),
+            ("restored_tokens", (self.restored_tokens as usize).into()),
+            ("saves", (self.saves as usize).into()),
+            ("save_skips", (self.save_skips as usize).into()),
+            ("evictions", (self.evictions as usize).into()),
+            ("corruptions", (self.corruptions as usize).into()),
+            ("healed", (self.healed as usize).into()),
+            ("quarantined", (self.quarantined as usize).into()),
+            ("scrub_passes", (self.scrub_passes as usize).into()),
+            ("records_scrubbed", (self.records_scrubbed as usize).into()),
+        ])
+    }
+}
+
+struct Inner {
+    manifest: StoreManifest,
+    index: PrefixIndex,
+    lru: Lru,
+    free_slots: Vec<usize>,
+    next_slot: usize,
+    stored_bytes: u64,
+    maintainer: Maintainer,
+    counters: StoreCounters,
+}
+
+/// The store proper: one backing device (its own [`SimDisk`], distinct
+/// from the engine's working cache), the geometry shared with the
+/// engine, and mutex-guarded book-keeping. Thread-safe so the router can
+/// share one instance across engine waves and run maintenance on idle
+/// ticks.
+pub struct PersistentStore {
+    disk: Arc<SimDisk>,
+    layout: DiskLayout,
+    dir: Option<PathBuf>,
+    capacity_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+impl PersistentStore {
+    /// Open (or create) the store described by `cfg`. With a directory,
+    /// records live in `dir/store.bin` next to `dir/manifest.json`;
+    /// without one the store is memory-backed (reuse within the process
+    /// only). The fault profile is inherited from the engine so injected
+    /// campaigns also exercise the persistence path.
+    pub fn open(
+        cfg: &StoreConfig,
+        profile: DiskProfile,
+        fault: &FaultConfig,
+        layout: DiskLayout,
+    ) -> anyhow::Result<PersistentStore> {
+        let backend: Arc<dyn Backend> = match &cfg.dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                Arc::new(FileBackend::open(dir.join(DATA_FILE))?)
+            }
+            None => Arc::new(MemBackend::new()),
+        };
+        let backend: Arc<dyn Backend> = if fault.enabled() {
+            // decorrelate from the engine disk's fault stream
+            let mut fcfg = fault.clone();
+            fcfg.seed ^= 0x5704_E5E5;
+            Arc::new(FaultBackend::new(backend, fcfg))
+        } else {
+            backend
+        };
+        Self::open_with_backend(cfg, profile, layout, backend)
+    }
+
+    /// Open over an explicit backend (tests inject `FaultBackend` or a
+    /// shared `MemBackend` here). `cfg.dir` still controls where the
+    /// manifest lives.
+    pub fn open_with_backend(
+        cfg: &StoreConfig,
+        profile: DiskProfile,
+        layout: DiskLayout,
+        backend: Arc<dyn Backend>,
+    ) -> anyhow::Result<PersistentStore> {
+        anyhow::ensure!(cfg.capacity_bytes > 0, "store capacity must be positive");
+        // the store paces nothing: restores are timed by the engine's
+        // prefill clock, and scrubs run on idle budget
+        let disk = Arc::new(SimDisk::new(profile, backend, None));
+        let mut manifest = match &cfg.dir {
+            Some(dir) => StoreManifest::load(dir, &layout),
+            None => StoreManifest::new(&layout),
+        };
+
+        // Validate entries against the layout and the actual data-file
+        // length; drop anything inconsistent (a clean miss beats a panic
+        // deep in slot arithmetic).
+        let disk_len = disk.len();
+        let group = layout.group;
+        let mut dropped = 0usize;
+        manifest.entries.retain(|key, e| {
+            let n_groups = e.tokens.len() / group;
+            let ok = !e.tokens.is_empty()
+                && e.tokens.len() % group == 0
+                && n_groups <= layout.max_groups
+                && e.checksums.len() == layout.n_layers * n_groups
+                && layout.offset(e.slot, layout.n_layers - 1, n_groups - 1)
+                    + layout.group_stride()
+                    <= disk_len;
+            if !ok {
+                crate::log_info!("store: dropping inconsistent entry {key:016x}");
+                dropped += 1;
+            }
+            ok
+        });
+
+        // Re-arm integrity from the persisted checksums so the first
+        // read of every record verifies against its historical write.
+        let payload = layout.group_payload_bytes() as usize;
+        let mut index = PrefixIndex::new();
+        let mut lru = Lru::new();
+        let mut stored_bytes = 0u64;
+        let mut used_slots: Vec<usize> = Vec::new();
+        for (&key, e) in &manifest.entries {
+            let n_groups = e.n_groups(group);
+            for layer in 0..layout.n_layers {
+                for gi in 0..n_groups {
+                    disk.integrity().stamp_sum(
+                        layout.offset(e.slot, layer, gi),
+                        payload,
+                        e.checksums[layer * n_groups + gi],
+                    );
+                }
+            }
+            index.insert(key, &e.tokens, group);
+            lru.restore(key, e.last_used);
+            stored_bytes += entry_bytes(&layout, n_groups);
+            used_slots.push(e.slot);
+        }
+        lru.restore_clock(manifest.clock);
+        used_slots.sort_unstable();
+        let next_slot = used_slots.last().map_or(0, |&s| s + 1);
+        let free_slots: Vec<usize> = (0..next_slot)
+            .filter(|s| used_slots.binary_search(s).is_err())
+            .collect();
+
+        let store = PersistentStore {
+            disk,
+            layout,
+            dir: cfg.dir.clone(),
+            capacity_bytes: cfg.capacity_bytes,
+            inner: Mutex::new(Inner {
+                manifest,
+                index,
+                lru,
+                free_slots,
+                next_slot,
+                stored_bytes,
+                maintainer: Maintainer::new(cfg.scrub_interval_s, cfg.scrub_budget),
+                counters: StoreCounters::default(),
+            }),
+        };
+        if dropped > 0 {
+            let inner = relock(&store.inner);
+            let _ = store.persist_locked(&inner);
+        }
+        Ok(store)
+    }
+
+    /// Longest stored group-aligned prefix of `tokens`, confirmed
+    /// token-by-token (hashes only nominate). Counts a hit or miss and
+    /// freshens the entry's recency.
+    pub fn lookup(&self, tokens: &[i32]) -> Option<PrefixMatch> {
+        let mut inner = relock(&self.inner);
+        let cands = inner.index.candidates(tokens, self.layout.group);
+        for (key, len) in cands {
+            let confirmed = inner
+                .manifest
+                .entries
+                .get(&key)
+                .is_some_and(|e| e.tokens.len() >= len && e.tokens[..len] == tokens[..len]);
+            if confirmed {
+                let t = inner.lru.touch(key);
+                inner.manifest.clock = t;
+                if let Some(e) = inner.manifest.entries.get_mut(&key) {
+                    e.last_used = t;
+                }
+                inner.counters.hits += 1;
+                return Some(PrefixMatch { entry: key, tokens: len });
+            }
+        }
+        inner.counters.misses += 1;
+        None
+    }
+
+    /// Pin `entry` against eviction for the duration of a restore+save
+    /// window. Pins are counted; every `pin` needs a matching `unpin`.
+    pub fn pin(&self, entry: u64) {
+        relock(&self.inner).lru.pin(entry);
+    }
+
+    pub fn unpin(&self, entry: u64) {
+        relock(&self.inner).lru.unpin(entry);
+    }
+
+    /// Read back the first `n_tokens` (multiple of the group size) of a
+    /// matched entry as per-layer `(k_rows, v_rows)` — bit-identical to
+    /// what was saved. A record that fails after one retry records a
+    /// corruption site and errors; the caller falls back to cold
+    /// prefill.
+    pub fn restore(
+        &self,
+        m: &PrefixMatch,
+        n_tokens: usize,
+    ) -> anyhow::Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let g = self.layout.group;
+        anyhow::ensure!(
+            n_tokens > 0 && n_tokens % g == 0 && n_tokens <= m.tokens,
+            "restore length {n_tokens} not a group multiple within the match"
+        );
+        let slot = {
+            let inner = relock(&self.inner);
+            inner
+                .manifest
+                .entries
+                .get(&m.entry)
+                .map(|e| e.slot)
+                .ok_or_else(|| anyhow::anyhow!("store entry {:016x} vanished", m.entry))?
+        };
+        let n_groups = n_tokens / g;
+        let payload = self.layout.group_payload_bytes() as usize;
+        let mut out = Vec::with_capacity(self.layout.n_layers);
+        for layer in 0..self.layout.n_layers {
+            let hd = self.layout.hd;
+            let mut k_rows = Vec::with_capacity(n_tokens * hd);
+            let mut v_rows = Vec::with_capacity(n_tokens * hd);
+            for gi in 0..n_groups {
+                let off = self.layout.offset(slot, layer, gi);
+                let mut buf = vec![0u8; payload];
+                if let Err(e) = self.read_record(off, &mut buf) {
+                    if matches!(e, DiskError::Corrupt { .. }) {
+                        self.record_corruption(m.entry, layer, gi, off, &e);
+                    }
+                    return Err(anyhow::anyhow!(
+                        "store restore failed at entry {:016x} layer {layer} group {gi}: {e}",
+                        m.entry
+                    ));
+                }
+                let (k, v) = self.layout.decode_group(&buf);
+                k_rows.extend_from_slice(&k);
+                v_rows.extend_from_slice(&v);
+            }
+            out.push((k_rows, v_rows));
+        }
+        relock(&self.inner).counters.restored_tokens += n_tokens as u64;
+        Ok(out)
+    }
+
+    /// Persist one prompt's prefill output (per-layer flat `(k, v)` rows,
+    /// `tokens.len() * hd` floats each). Partial trailing groups are
+    /// floored away. Returns the number of tokens actually stored — `0`
+    /// when the save was deduplicated, over capacity with everything
+    /// pinned, or too large to ever fit.
+    pub fn save(&self, tokens: &[i32], layers: &[(Vec<f32>, Vec<f32>)]) -> anyhow::Result<usize> {
+        let g = self.layout.group;
+        let hd = self.layout.hd;
+        let full = (tokens.len() / g) * g;
+        let n_groups = full / g;
+        if full == 0 {
+            return Ok(0);
+        }
+        anyhow::ensure!(
+            layers.len() == self.layout.n_layers,
+            "save: {} layers, layout has {}",
+            layers.len(),
+            self.layout.n_layers
+        );
+        anyhow::ensure!(
+            n_groups <= self.layout.max_groups,
+            "save: {n_groups} groups exceeds layout capacity {}",
+            self.layout.max_groups
+        );
+        for (k_rows, v_rows) in layers {
+            anyhow::ensure!(
+                k_rows.len() >= full * hd && v_rows.len() >= full * hd,
+                "save: layer rows shorter than {full} tokens"
+            );
+        }
+        let key = chain_hash(&tokens[..full]);
+        let bytes_new = entry_bytes(&self.layout, n_groups);
+
+        let slot = {
+            let mut inner = relock(&self.inner);
+            // dedup: exact entry, or an existing entry covering this
+            // prefix in full — just freshen the *covering* entry
+            let covering = if inner.manifest.entries.contains_key(&key) {
+                Some(key)
+            } else {
+                inner
+                    .index
+                    .candidates(&tokens[..full], g)
+                    .into_iter()
+                    .find(|&(k, len)| {
+                        len == full
+                            && inner
+                                .manifest
+                                .entries
+                                .get(&k)
+                                .is_some_and(|e| e.tokens[..len] == tokens[..len])
+                    })
+                    .map(|(k, _)| k)
+            };
+            if let Some(k) = covering {
+                let t = inner.lru.touch(k);
+                inner.manifest.clock = t;
+                if let Some(e) = inner.manifest.entries.get_mut(&k) {
+                    e.last_used = t;
+                }
+                inner.counters.save_skips += 1;
+                return Ok(0);
+            }
+            if bytes_new > self.capacity_bytes {
+                inner.counters.save_skips += 1;
+                return Ok(0);
+            }
+            while inner.stored_bytes + bytes_new > self.capacity_bytes {
+                let Some(victim) = inner.lru.victim() else {
+                    // everything pinned: never evict under a reader
+                    inner.counters.save_skips += 1;
+                    return Ok(0);
+                };
+                self.evict_locked(&mut inner, victim);
+            }
+            match inner.free_slots.pop() {
+                Some(s) => s,
+                None => {
+                    let s = inner.next_slot;
+                    inner.next_slot += 1;
+                    s
+                }
+            }
+        };
+
+        // write records lock-free (the slot is reserved; nobody else
+        // writes it), collecting the manifest checksums as we go
+        let mut checksums = Vec::with_capacity(self.layout.n_layers * n_groups);
+        for (layer, (k_rows, v_rows)) in layers.iter().enumerate() {
+            for gi in 0..n_groups {
+                let span = gi * g * hd..(gi + 1) * g * hd;
+                let rec = self
+                    .layout
+                    .encode_group(&k_rows[span.clone()], &v_rows[span]);
+                let off = self.layout.offset(slot, layer, gi);
+                if let Err(e) = self.disk.write(off, &rec) {
+                    let mut inner = relock(&self.inner);
+                    inner.free_slots.push(slot);
+                    inner.counters.save_skips += 1;
+                    return Err(anyhow::anyhow!("store save write failed: {e}"));
+                }
+                checksums.push(self.layout.record_checksum(&rec));
+            }
+        }
+
+        let mut inner = relock(&self.inner);
+        let t = inner.lru.insert(key);
+        inner.manifest.clock = t;
+        inner.manifest.entries.insert(
+            key,
+            StoreEntry {
+                tokens: tokens[..full].to_vec(),
+                slot,
+                last_used: t,
+                checksums,
+            },
+        );
+        inner.index.insert(key, &tokens[..full], g);
+        inner.stored_bytes += bytes_new;
+        inner.counters.saves += 1;
+        self.persist_locked(&inner)?;
+        Ok(full)
+    }
+
+    /// Idle-tick entry point: runs one budgeted scrub pass when the
+    /// deadline has elapsed, else returns `None` immediately.
+    pub fn maintain(&self, now: Instant) -> Option<ScrubReport> {
+        let batch = {
+            let mut inner = relock(&self.inner);
+            if !inner.maintainer.due(now) {
+                return None;
+            }
+            inner.maintainer.begin(now);
+            let mut keys: Vec<u64> = inner.manifest.entries.keys().copied().collect();
+            keys.sort_unstable();
+            inner.maintainer.next_batch(&keys)
+        };
+        Some(self.scrub_entries(&batch))
+    }
+
+    /// Scrub up to `budget` entries right now, deadline or not (CLI and
+    /// tests; pass `usize::MAX` for a full sweep).
+    pub fn scrub_now(&self, budget: usize) -> ScrubReport {
+        let batch: Vec<u64> = {
+            let inner = relock(&self.inner);
+            let mut keys: Vec<u64> = inner.manifest.entries.keys().copied().collect();
+            keys.sort_unstable();
+            keys.truncate(budget);
+            keys
+        };
+        self.scrub_entries(&batch)
+    }
+
+    fn scrub_entries(&self, keys: &[u64]) -> ScrubReport {
+        let mut rep = ScrubReport::default();
+        let g = self.layout.group;
+        let payload = self.layout.group_payload_bytes() as usize;
+        for &key in keys {
+            let Some((slot, n_groups)) = ({
+                let inner = relock(&self.inner);
+                inner
+                    .manifest
+                    .entries
+                    .get(&key)
+                    .map(|e| (e.slot, e.n_groups(g)))
+            }) else {
+                continue; // evicted between scheduling and scan
+            };
+            rep.entries_scanned += 1;
+            let mut bad: Option<(usize, usize, u64, String)> = None;
+            'entry: for layer in 0..self.layout.n_layers {
+                for gi in 0..n_groups {
+                    let off = self.layout.offset(slot, layer, gi);
+                    let mut buf = vec![0u8; payload];
+                    match self.disk.read(off, &mut buf) {
+                        Ok(_) => rep.records_clean += 1,
+                        // one heal attempt: transient faults clear
+                        Err(_) => match self.disk.read(off, &mut buf) {
+                            Ok(_) => {
+                                rep.healed += 1;
+                                rep.records_clean += 1;
+                                relock(&self.inner).counters.healed += 1;
+                            }
+                            Err(e) => {
+                                bad = Some((layer, gi, off, e.to_string()));
+                                break 'entry;
+                            }
+                        },
+                    }
+                }
+            }
+            if let Some((layer, gi, off, detail)) = bad {
+                rep.corruptions += 1;
+                rep.quarantined += 1;
+                let mut inner = relock(&self.inner);
+                let at = inner.lru.clock();
+                inner.manifest.corruption_log.push(CorruptionSite {
+                    entry: key,
+                    layer,
+                    group: gi,
+                    offset: off,
+                    detail,
+                    at,
+                });
+                inner.counters.corruptions += 1;
+                self.quarantine_locked(&mut inner, key);
+                let _ = self.persist_locked(&inner);
+                crate::log_info!(
+                    "store: quarantined entry {key:016x} (layer {layer} group {gi})"
+                );
+            }
+        }
+        let mut inner = relock(&self.inner);
+        inner.counters.scrub_passes += 1;
+        inner.counters.records_scrubbed += (rep.records_clean + rep.corruptions) as u64;
+        rep
+    }
+
+    fn read_record(&self, off: u64, buf: &mut [u8]) -> Result<(), DiskError> {
+        match self.disk.read(off, buf) {
+            Ok(_) => Ok(()),
+            Err(e) if e.is_retryable() => match self.disk.read(off, buf) {
+                Ok(_) => {
+                    relock(&self.inner).counters.healed += 1;
+                    Ok(())
+                }
+                Err(e2) => Err(e2),
+            },
+            Err(e) => Err(e),
+        }
+    }
+
+    fn record_corruption(&self, entry: u64, layer: usize, group: usize, off: u64, e: &DiskError) {
+        let mut inner = relock(&self.inner);
+        let at = inner.lru.clock();
+        inner.manifest.corruption_log.push(CorruptionSite {
+            entry,
+            layer,
+            group,
+            offset: off,
+            detail: e.to_string(),
+            at,
+        });
+        inner.counters.corruptions += 1;
+        let _ = self.persist_locked(&inner);
+    }
+
+    fn evict_locked(&self, inner: &mut Inner, key: u64) {
+        if self.drop_entry_locked(inner, key) {
+            inner.counters.evictions += 1;
+        }
+    }
+
+    /// Quarantine ignores pins: poisoned bytes must not be nominated
+    /// again even to the session that pinned them (its restore already
+    /// failed and fell back to recompute).
+    fn quarantine_locked(&self, inner: &mut Inner, key: u64) {
+        if self.drop_entry_locked(inner, key) {
+            inner.counters.quarantined += 1;
+        }
+    }
+
+    fn drop_entry_locked(&self, inner: &mut Inner, key: u64) -> bool {
+        // drop the LRU node even when the manifest entry is gone, so a
+        // failed eviction can never renominate the same victim forever
+        inner.lru.remove(key);
+        let Some(e) = inner.manifest.entries.remove(&key) else {
+            return false;
+        };
+        inner.index.remove(key, &e.tokens, self.layout.group);
+        inner.free_slots.push(e.slot);
+        inner.stored_bytes = inner
+            .stored_bytes
+            .saturating_sub(entry_bytes(&self.layout, e.n_groups(self.layout.group)));
+        true
+    }
+
+    fn persist_locked(&self, inner: &Inner) -> anyhow::Result<()> {
+        match &self.dir {
+            Some(dir) => inner.manifest.persist(dir),
+            None => Ok(()),
+        }
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        relock(&self.inner).counters
+    }
+
+    pub fn entries(&self) -> usize {
+        relock(&self.inner).manifest.entries.len()
+    }
+
+    pub fn stored_bytes(&self) -> u64 {
+        relock(&self.inner).stored_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn corruption_sites(&self) -> Vec<CorruptionSite> {
+        relock(&self.inner).manifest.corruption_log.clone()
+    }
+
+    pub fn layout(&self) -> &DiskLayout {
+        &self.layout
+    }
+}
+
+fn entry_bytes(layout: &DiskLayout, n_groups: usize) -> u64 {
+    n_groups as u64 * layout.group_stride() * layout.n_layers as u64
+}

@@ -15,6 +15,11 @@ pub struct Request {
     pub arrival_s: f64,
     /// Seed for the request's synthetic content.
     pub seed: u64,
+    /// Explicit prompt tokens (server `"tokens": [...]` payloads). When
+    /// set, `prompt_tokens` returns these verbatim — the path that lets
+    /// repeated real prompts hit the persistent KV store; when `None`
+    /// the prompt is derived from `seed`.
+    pub tokens: Option<Vec<i32>>,
 }
 
 #[derive(Debug, Clone)]
@@ -66,13 +71,18 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
                 },
                 arrival_s: t,
                 seed: cfg.seed.wrapping_add(i as u64 * 7919),
+                tokens: None,
             }
         })
         .collect()
 }
 
-/// Random token prompt for a request (vocabulary-bounded).
+/// Prompt for a request: the explicit tokens when the client sent them,
+/// else a seeded random prompt (vocabulary-bounded).
 pub fn prompt_tokens(req: &Request, vocab: usize) -> Vec<i32> {
+    if let Some(t) = &req.tokens {
+        return t.clone();
+    }
     let mut rng = Rng::new(req.seed);
     (0..req.context).map(|_| rng.below(vocab) as i32).collect()
 }
@@ -124,10 +134,24 @@ mod tests {
             decode: 1,
             arrival_s: 0.0,
             seed: 9,
+            tokens: None,
         };
         let toks = prompt_tokens(&r, 512);
         assert_eq!(toks.len(), 50);
         assert!(toks.iter().all(|&t| (0..512).contains(&t)));
         assert_eq!(toks, prompt_tokens(&r, 512));
+    }
+
+    #[test]
+    fn explicit_tokens_override_seeded_prompt() {
+        let r = Request {
+            id: 0,
+            context: 3,
+            decode: 1,
+            arrival_s: 0.0,
+            seed: 9,
+            tokens: Some(vec![5, 6, 7]),
+        };
+        assert_eq!(prompt_tokens(&r, 512), vec![5, 6, 7]);
     }
 }

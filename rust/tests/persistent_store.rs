@@ -1,0 +1,291 @@
+//! Integration tests for the persistent KV store: bit-identical
+//! restores across reopen, crash-safe manifest persistence, pinned LRU
+//! eviction, and scheduled scrubbing of injected corruption.
+//!
+//! These tests need no AOT artifacts — the store operates on raw group
+//! records below the engine.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kvswap::config::{FaultConfig, StoreConfig};
+use kvswap::disk::{Backend, DiskProfile, Fault, FaultBackend, MemBackend};
+use kvswap::kvcache::DiskLayout;
+use kvswap::store::PersistentStore;
+use kvswap::util::rng::Rng;
+
+/// Small geometry: hd=8, G=4, 64-token capacity (16 groups), 2 layers,
+/// no page padding. One 8-token entry = 2 groups x 2 layers x 256 B
+/// = 1024 B.
+fn layout() -> DiskLayout {
+    DiskLayout::new(8, 4, 64, 2, 0)
+}
+
+fn cfg_mem(capacity: u64) -> StoreConfig {
+    StoreConfig {
+        enabled: true,
+        dir: None,
+        capacity_bytes: capacity,
+        scrub_interval_s: 3600.0,
+        scrub_budget: 4,
+    }
+}
+
+fn cfg_dir(dir: &std::path::Path, capacity: u64) -> StoreConfig {
+    StoreConfig {
+        dir: Some(dir.to_path_buf()),
+        ..cfg_mem(capacity)
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("kvswap-store-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tokens_for(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(512) as i32).collect()
+}
+
+fn rows_for(lo: &DiskLayout, n_tokens: usize, seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    (0..lo.n_layers)
+        .map(|_| {
+            let k: Vec<f32> = (0..n_tokens * lo.hd).map(|_| rng.normal_f32(1.0)).collect();
+            let v: Vec<f32> = (0..n_tokens * lo.hd).map(|_| rng.normal_f32(1.0)).collect();
+            (k, v)
+        })
+        .collect()
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn restore_is_bit_identical_across_reopen() {
+    let dir = tmp_dir("roundtrip");
+    let lo = layout();
+    let cfg = cfg_dir(&dir, 1 << 20);
+    let fault = FaultConfig::default();
+    let tokens = tokens_for(16, 1);
+    let rows = rows_for(&lo, 16, 2);
+    {
+        let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+        assert_eq!(store.save(&tokens, &rows).unwrap(), 16);
+    }
+
+    // "next process": reopen from the manifest alone
+    let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+    assert_eq!(store.entries(), 1);
+    let m = store.lookup(&tokens).expect("stored prefix found after reopen");
+    assert_eq!(m.tokens, 16);
+    let restored = store.restore(&m, 16).unwrap();
+    assert_eq!(restored.len(), lo.n_layers);
+    for (layer, (k, v)) in restored.iter().enumerate() {
+        assert_eq!(bits(k), bits(&rows[layer].0), "layer {layer} K rows");
+        assert_eq!(bits(v), bits(&rows[layer].1), "layer {layer} V rows");
+    }
+
+    // a prompt diverging after 8 tokens matches only the shared,
+    // group-aligned prefix; the partial restore is bit-identical too
+    let mut fork = tokens[..8].to_vec();
+    for i in 0..8 {
+        fork.push((tokens[8 + i] + 1) % 512);
+    }
+    let m2 = store.lookup(&fork).expect("shared prefix found");
+    assert_eq!(m2.tokens, 8);
+    let part = store.restore(&m2, 8).unwrap();
+    for (layer, (k, v)) in part.iter().enumerate() {
+        assert_eq!(bits(k), bits(&rows[layer].0[..8 * lo.hd]));
+        assert_eq!(bits(v), bits(&rows[layer].1[..8 * lo.hd]));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_survives_simulated_crash() {
+    let dir = tmp_dir("crash");
+    let lo = layout();
+    let cfg = cfg_dir(&dir, 1 << 20);
+    let fault = FaultConfig::default();
+    let tokens = tokens_for(8, 3);
+    {
+        let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+        assert_eq!(store.save(&tokens, &rows_for(&lo, 8, 4)).unwrap(), 8);
+    }
+
+    // crash between temp write and rename: the unpublished temp file is
+    // discarded on open and the last published manifest stays live
+    std::fs::write(dir.join("manifest.json.tmp"), b"{\"version\": 99, \"gar").unwrap();
+    {
+        let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+        assert!(!dir.join("manifest.json.tmp").exists(), "temp discarded");
+        assert_eq!(store.entries(), 1);
+        assert!(store.lookup(&tokens).is_some());
+    }
+
+    // torn live manifest (crash mid-sector, truncated JSON): the store
+    // reopens clean instead of refusing to start, and accepts new saves
+    std::fs::write(dir.join("manifest.json"), b"{\"version\": 1, \"ent").unwrap();
+    let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+    assert_eq!(store.entries(), 0);
+    assert!(store.lookup(&tokens).is_none());
+    assert_eq!(store.save(&tokens, &rows_for(&lo, 8, 4)).unwrap(), 8);
+    assert!(store.lookup(&tokens).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lru_eviction_respects_capacity_and_pins() {
+    let lo = layout();
+    // room for exactly two 1024-B entries
+    let store =
+        PersistentStore::open(&cfg_mem(2048), DiskProfile::nvme(), &FaultConfig::default(), lo.clone())
+            .unwrap();
+    let (ta, tb, tc, td) = (
+        tokens_for(8, 10),
+        tokens_for(8, 11),
+        tokens_for(8, 12),
+        tokens_for(8, 13),
+    );
+    assert_eq!(store.save(&ta, &rows_for(&lo, 8, 20)).unwrap(), 8);
+    assert_eq!(store.save(&tb, &rows_for(&lo, 8, 21)).unwrap(), 8);
+    assert_eq!(store.entries(), 2);
+    assert_eq!(store.stored_bytes(), 2048);
+
+    // freshen A so B becomes the LRU victim
+    assert!(store.lookup(&ta).is_some());
+    assert_eq!(store.save(&tc, &rows_for(&lo, 8, 22)).unwrap(), 8);
+    assert_eq!(store.entries(), 2);
+    assert!(store.lookup(&tb).is_none(), "B evicted");
+    assert!(store.lookup(&ta).is_some(), "A survived");
+
+    // pin everything: the store must skip the save, never evict under a
+    // pinned (in-restore) entry
+    let ma = store.lookup(&ta).unwrap();
+    let mc = store.lookup(&tc).unwrap();
+    store.pin(ma.entry);
+    store.pin(mc.entry);
+    assert_eq!(store.save(&td, &rows_for(&lo, 8, 23)).unwrap(), 0);
+    assert_eq!(store.entries(), 2);
+    assert!(store.lookup(&td).is_none());
+
+    // unpin A (now the oldest unpinned): D lands by evicting A
+    store.unpin(ma.entry);
+    assert_eq!(store.save(&td, &rows_for(&lo, 8, 23)).unwrap(), 8);
+    assert!(store.lookup(&ta).is_none(), "A evicted after unpin");
+    assert!(store.lookup(&tc).is_some(), "pinned C untouched");
+    assert!(store.lookup(&td).is_some());
+    let c = store.counters();
+    assert!(c.evictions >= 2, "evictions counted: {c:?}");
+    assert!(c.save_skips >= 1, "pinned-full save skipped: {c:?}");
+    assert!(store.stored_bytes() <= store.capacity_bytes());
+}
+
+#[test]
+fn scrub_detects_records_and_quarantines_corruption() {
+    let lo = layout();
+    let mem = Arc::new(MemBackend::new());
+    let store = PersistentStore::open_with_backend(
+        &cfg_mem(1 << 20),
+        DiskProfile::nvme(),
+        lo.clone(),
+        mem.clone(),
+    )
+    .unwrap();
+    let ta = tokens_for(8, 30);
+    let tb = tokens_for(8, 31);
+    assert_eq!(store.save(&ta, &rows_for(&lo, 8, 40)).unwrap(), 8);
+    assert_eq!(store.save(&tb, &rows_for(&lo, 8, 41)).unwrap(), 8);
+
+    // flip one byte of A's (slot 0) layer-0 group-1 record behind the
+    // integrity map's back — silent media rot
+    let off = lo.offset(0, 0, 1);
+    let mut b = [0u8; 1];
+    mem.read_at(off + 5, &mut b).unwrap();
+    mem.write_at(off + 5, &[b[0] ^ 0xFF]).unwrap();
+
+    let rep = store.scrub_now(usize::MAX);
+    assert_eq!(rep.entries_scanned, 2);
+    assert_eq!(rep.corruptions, 1);
+    assert_eq!(rep.quarantined, 1);
+    assert_eq!(store.entries(), 1, "poisoned entry quarantined");
+    assert!(store.lookup(&ta).is_none());
+    assert!(store.lookup(&tb).is_some(), "clean entry untouched");
+
+    // the corruption site is recorded for post-mortem, pointing at the
+    // exact record
+    let sites = store.corruption_sites();
+    assert_eq!(sites.len(), 1);
+    assert_eq!(sites[0].layer, 0);
+    assert_eq!(sites[0].group, 1);
+    assert_eq!(sites[0].offset, off);
+    let c = store.counters();
+    assert_eq!(c.corruptions, 1);
+    assert_eq!(c.quarantined, 1);
+}
+
+#[test]
+fn scrub_heals_transient_faults_without_quarantine() {
+    let lo = layout();
+    let mem: Arc<dyn Backend> = Arc::new(MemBackend::new());
+    let fb = Arc::new(FaultBackend::quiet(mem));
+    let store = PersistentStore::open_with_backend(
+        &cfg_mem(1 << 20),
+        DiskProfile::nvme(),
+        lo.clone(),
+        fb.clone(),
+    )
+    .unwrap();
+    let tokens = tokens_for(8, 50);
+    assert_eq!(store.save(&tokens, &rows_for(&lo, 8, 51)).unwrap(), 8);
+
+    // the scrub's first read fails transiently; its immediate re-read
+    // succeeds and the entry stays
+    fb.script_at(fb.snapshot().reads, Fault::TransientIo);
+    let rep = store.scrub_now(usize::MAX);
+    assert_eq!(rep.healed, 1);
+    assert_eq!(rep.corruptions, 0);
+    assert_eq!(rep.quarantined, 0);
+    assert_eq!(store.entries(), 1);
+    assert_eq!(store.counters().healed, 1);
+}
+
+#[test]
+fn maintainer_gates_on_deadline_and_rotates_budget() {
+    let lo = layout();
+    let mut cfg = cfg_mem(1 << 20);
+    cfg.scrub_interval_s = 3600.0;
+    cfg.scrub_budget = 1;
+    let store =
+        PersistentStore::open(&cfg, DiskProfile::nvme(), &FaultConfig::default(), lo.clone())
+            .unwrap();
+    for s in 0..3u64 {
+        assert_eq!(
+            store.save(&tokens_for(8, 60 + s), &rows_for(&lo, 8, 70 + s)).unwrap(),
+            8
+        );
+    }
+
+    let now = Instant::now();
+    // first pass runs immediately; a second call inside the interval is
+    // gated
+    let rep1 = store.maintain(now).expect("first pass due");
+    assert_eq!(rep1.entries_scanned, 1, "budget of one entry per pass");
+    assert!(store.maintain(now).is_none(), "deadline gates the next pass");
+
+    // each deadline tick scrubs the next entry in rotation; after three
+    // passes every record was scanned exactly once:
+    // 3 entries x 2 layers x 2 groups = 12 records
+    let rep2 = store.maintain(now + Duration::from_secs(3601)).expect("second pass");
+    let rep3 = store.maintain(now + Duration::from_secs(7202)).expect("third pass");
+    assert_eq!(rep2.entries_scanned, 1);
+    assert_eq!(rep3.entries_scanned, 1);
+    let c = store.counters();
+    assert_eq!(c.scrub_passes, 3);
+    assert_eq!(c.records_scrubbed, 12);
+    assert_eq!(c.corruptions, 0);
+}

@@ -111,6 +111,7 @@ fn router_serves_a_trace_in_process() {
             decode: 4 + i as usize,
             arrival_s: 0.0,
             seed: i,
+            tokens: None,
         });
     }
     router.flush();
