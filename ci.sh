@@ -27,4 +27,46 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
   cargo run --release -q -- run --policy kvswap --context 512 --steps 8 \
     --fault-rate 0.05 --fault-corrupt-rate 0.05 --fault-seed 7 --io-retries 5 \
     --fault-persistent --store-mem --store-capacity 64
+
+  # serve-mode fault smoke: a session with mid-stream faults and one
+  # doomed (oversized) request must keep emitting completions — the
+  # failed wave gets an "error" completion, the flanking requests real
+  # tokens, and the stats line stays consistent (wave_errors counted,
+  # store counters present)
+  PORT=$((20000 + RANDOM % 20000))
+  cargo run --release -q -- serve --addr 127.0.0.1:"$PORT" --policy kvswap \
+    --max-context 1024 --batch-max-context 1048576 --max-conns 2 \
+    --fault-rate 0.02 --fault-seed 7 --io-retries 5 --store-mem &
+  SERVE_PID=$!
+  for _ in $(seq 1 50); do
+    if exec 3<>/dev/tcp/127.0.0.1/"$PORT" 2>/dev/null; then break; fi
+    sleep 0.2
+  done
+  {
+    echo '{"id": 1, "context": 128, "decode": 2}'
+    echo 'flush'
+    echo '{"id": 2, "context": 1048576, "decode": 2}'
+    echo 'flush'
+    echo '{"id": 3, "context": 128, "decode": 2}'
+    echo 'quit'
+  } >&3
+  CONN1=$(cat <&3)
+  exec 3>&-
+  echo "$CONN1"
+  echo "$CONN1" | grep -q '"id":1,"tokens":\[[0-9-]' \
+    || { echo "FAIL: request 1 got no tokens"; kill $SERVE_PID; exit 1; }
+  echo "$CONN1" | grep -q '"id":2,.*"error"' \
+    || { echo "FAIL: oversized request 2 lacks an error completion"; kill $SERVE_PID; exit 1; }
+  echo "$CONN1" | grep -q '"id":3,"tokens":\[[0-9-]' \
+    || { echo "FAIL: request 3 got no tokens after the failed wave"; kill $SERVE_PID; exit 1; }
+  exec 4<>/dev/tcp/127.0.0.1/"$PORT"
+  printf 'stats\nquit\n' >&4
+  STATS=$(cat <&4)
+  exec 4>&-
+  echo "$STATS"
+  echo "$STATS" | grep -q '"wave_errors":1' \
+    || { echo "FAIL: failed wave not counted in stats"; kill $SERVE_PID; exit 1; }
+  echo "$STATS" | grep -q '"store"' \
+    || { echo "FAIL: stats lost the store counters"; kill $SERVE_PID; exit 1; }
+  wait $SERVE_PID
 fi

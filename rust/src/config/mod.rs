@@ -415,6 +415,10 @@ pub struct StoreConfig {
     pub scrub_interval_s: f64,
     /// Max entries verified per scrub pass (cursor rotates across passes).
     pub scrub_budget: usize,
+    /// Stream warm-start restores into prefill chunk-by-chunk so disk
+    /// reads overlap compute (`false` ⇒ restore fully before the first
+    /// prefill chunk runs). Restores are bit-identical either way.
+    pub pipelined_restore: bool,
 }
 
 impl Default for StoreConfig {
@@ -425,6 +429,7 @@ impl Default for StoreConfig {
             capacity_bytes: 256 << 20,
             scrub_interval_s: 5.0,
             scrub_budget: 4,
+            pipelined_restore: true,
         }
     }
 }
@@ -443,6 +448,7 @@ impl StoreConfig {
             ("capacity_bytes", (self.capacity_bytes as usize).into()),
             ("scrub_interval_s", self.scrub_interval_s.into()),
             ("scrub_budget", self.scrub_budget.into()),
+            ("pipelined_restore", self.pipelined_restore.into()),
         ])
     }
 
@@ -460,6 +466,10 @@ impl StoreConfig {
             capacity_bytes: j.usize_or("capacity_bytes", d.capacity_bytes as usize) as u64,
             scrub_interval_s: j.f64_or("scrub_interval_s", d.scrub_interval_s),
             scrub_budget: j.usize_or("scrub_budget", d.scrub_budget),
+            pipelined_restore: j
+                .get("pipelined_restore")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.pipelined_restore),
         }
     }
 }
@@ -594,12 +604,14 @@ mod tests {
         let d = StoreConfig::default();
         assert!(!d.enabled, "persistent store must be opt-in");
         assert!(d.capacity_bytes > 0);
+        assert!(d.pipelined_restore, "pipelined warm restores default on");
         let c = StoreConfig {
             enabled: true,
             dir: Some(std::path::PathBuf::from("/tmp/kv-store")),
             capacity_bytes: 64 << 20,
             scrub_interval_s: 0.5,
             scrub_budget: 2,
+            pipelined_restore: false,
         };
         let back = StoreConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
         assert_eq!(back, c);

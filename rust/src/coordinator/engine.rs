@@ -41,7 +41,7 @@ use crate::disk::{
 use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
 use crate::metrics::{Breakdown, DecodeStats, Phase};
 use crate::predictor::{self, OverlapTracker};
-use crate::store::PersistentStore;
+use crate::store::{PersistentStore, PrefixMatch};
 use crate::runtime::host_ref::{HostModel, KvLayer};
 use crate::runtime::tensor::{Tensor, TensorI32};
 use crate::runtime::{ModelRuntime, PjrtRuntime};
@@ -316,6 +316,145 @@ pub struct Engine {
     /// Prompt tokens warm-started from the store instead of recomputed,
     /// summed over prefill calls and all batch rows.
     reused_prefix_tokens: u64,
+    /// Prefill-phase restore stalls (full blocking time, or the residual
+    /// the pipelined worker failed to hide), summed over prefill calls.
+    prefill_io_wait: Duration,
+    /// Store device read-busy time incurred by warm-start restores.
+    prefill_store_busy: Duration,
+}
+
+/// Message stream from the store-restore worker to prefill: staged
+/// `(layer, chunk)` units in layer-major order, tear notices, then
+/// `Done`.
+enum RestoreMsg {
+    Unit {
+        layer: usize,
+        /// Chunk index inside the warm region (token offset = `chunk *
+        /// prefill_chunk`).
+        chunk: usize,
+        /// Per-batch-row token-major `(k_rows, v_rows)` for this range.
+        per_seq: Vec<(Vec<f32>, Vec<f32>)>,
+        /// Modeled device time of the reads behind this unit.
+        io_time: Duration,
+        issued_at: Instant,
+    },
+    /// Warm chunks `>= chunk` are unusable (a record stayed bad after
+    /// retry); prefill degrades by recomputing from that chunk onward,
+    /// keeping every chunk restored before it.
+    Torn { chunk: usize },
+    Done,
+}
+
+/// Engine-side handle on the pipelined warm-start restore stream.
+struct RestorePipeline {
+    rx: std::sync::mpsc::Receiver<RestoreMsg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Chunks committed into the prefill caches, per layer.
+    committed: Vec<usize>,
+    done: bool,
+}
+
+/// Backpressure bound on staged-but-uncommitted units (each holds
+/// `batch * chunk * hd * 2` floats): the worker stays a few units ahead
+/// of compute without buffering the whole warm region in memory.
+const RESTORE_QUEUE_DEPTH: usize = 4;
+
+/// Stream the warm region out of the store on a dedicated thread,
+/// layer-major (all of layer 0's chunks, then layer 1's, …) to match
+/// prefill's consumption order: the first computed chunk touches layers
+/// in ascending order and layer `l` only needs its *own* warm chunks
+/// staged, so later layers' reads overlap earlier layers' compute. The
+/// worker shares only the `PersistentStore` (its backend + book-keeping
+/// are thread-safe); everything runtime-bound stays on the engine
+/// thread, mirroring the prefetch pool's split.
+fn spawn_restore_worker(
+    store: Arc<PersistentStore>,
+    matches: Vec<PrefixMatch>,
+    warm_chunks: usize,
+    chunk: usize,
+    n_layers: usize,
+) -> RestorePipeline {
+    let (tx, rx) = std::sync::mpsc::sync_channel(RESTORE_QUEUE_DEPTH);
+    let handle = std::thread::Builder::new()
+        .name("store-restore".into())
+        .spawn(move || {
+            // a tear shrinks the usable region for *every* layer: chunks
+            // at or past the tear are skipped, earlier ones keep flowing
+            let mut limit = warm_chunks;
+            'layers: for layer in 0..n_layers {
+                for c in 0..warm_chunks {
+                    if c >= limit {
+                        break;
+                    }
+                    let issued_at = Instant::now();
+                    let mut per_seq = Vec::with_capacity(matches.len());
+                    let mut io_time = Duration::ZERO;
+                    let mut torn = false;
+                    for m in &matches {
+                        match store.restore_chunk(m, layer, c * chunk, chunk) {
+                            Ok(r) => {
+                                io_time += r.io_time;
+                                per_seq.push((r.k_rows, r.v_rows));
+                            }
+                            Err(e) => {
+                                crate::log_debug!(
+                                    "pipelined restore tore at layer {layer} chunk {c}: {e}"
+                                );
+                                torn = true;
+                                break;
+                            }
+                        }
+                    }
+                    if torn {
+                        limit = c;
+                        if tx.send(RestoreMsg::Torn { chunk: c }).is_err() {
+                            return; // engine gone
+                        }
+                        if limit == 0 {
+                            break 'layers;
+                        }
+                        continue;
+                    }
+                    let unit = RestoreMsg::Unit { layer, chunk: c, per_seq, io_time, issued_at };
+                    if tx.send(unit).is_err() {
+                        return;
+                    }
+                }
+            }
+            let _ = tx.send(RestoreMsg::Done);
+        })
+        .expect("spawn store-restore worker");
+    RestorePipeline {
+        rx,
+        handle: Some(handle),
+        committed: vec![0; n_layers],
+        done: false,
+    }
+}
+
+/// Scatter token-major `(k_rows, v_rows)` into one layer's
+/// `[b, hkv, ncap, d]` prefill caches at token offset `t0`.
+#[allow(clippy::too_many_arguments)]
+fn scatter_chunk(
+    k_cache: &mut Tensor,
+    v_cache: &mut Tensor,
+    bi: usize,
+    hkv: usize,
+    d: usize,
+    hd: usize,
+    t0: usize,
+    n_tokens: usize,
+    k_rows: &[f32],
+    v_rows: &[f32],
+) {
+    for t in 0..n_tokens {
+        for g in 0..hkv {
+            for dd in 0..d {
+                *k_cache.at_mut(&[bi, g, t0 + t, dd]) = k_rows[t * hd + g * d + dd];
+                *v_cache.at_mut(&[bi, g, t0 + t, dd]) = v_rows[t * hd + g * d + dd];
+            }
+        }
+    }
 }
 
 impl Engine {
@@ -543,6 +682,8 @@ impl Engine {
             degraded: 0,
             store,
             reused_prefix_tokens: 0,
+            prefill_io_wait: Duration::ZERO,
+            prefill_store_busy: Duration::ZERO,
         })
     }
 
@@ -584,6 +725,20 @@ impl Engine {
         }
         let wait = self.breakdown.get(Phase::IoWait).as_secs_f64();
         (1.0 - wait / busy).clamp(0.0, 1.0)
+    }
+
+    /// Fraction of the persistent store's device read time hidden behind
+    /// prefill compute across this engine's warm starts: `1 - stall /
+    /// read_busy`. `None` until a warm-start restore has run; a blocking
+    /// restore reports `Some(0.0)` (nothing hides it), the pipelined
+    /// restore worker pushes it toward 1.
+    pub fn prefill_io_overlap_ratio(&self) -> Option<f64> {
+        let busy = self.prefill_store_busy.as_secs_f64();
+        if busy <= 0.0 {
+            return None;
+        }
+        let wait = self.prefill_io_wait.as_secs_f64();
+        Some((1.0 - wait / busy).clamp(0.0, 1.0))
     }
 
     /// The engine's persistent store handle, if one is open (the router
@@ -665,7 +820,23 @@ impl Engine {
     /// serving example). All prompts must share a length ≤ prefill_ncap.
     /// Returns the first generated token per sequence.
     pub fn prefill(&mut self, prompts: &[Vec<i32>]) -> anyhow::Result<Vec<i32>> {
+        let limits: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        self.prefill_with_save_limits(prompts, &limits)
+    }
+
+    /// Prefill with per-row store-save limits: row `bi` persists only
+    /// `prompts[bi][..save_limits[bi]]` (the unpadded request prefix),
+    /// and a limit of `0` marks a batch-padding row that must never
+    /// reach the store. The router pads ragged waves with zeros; saving
+    /// those verbatim would fill the store with pad-polluted keys that
+    /// evict real prefixes and can never match unpadded traffic.
+    pub fn prefill_with_save_limits(
+        &mut self,
+        prompts: &[Vec<i32>],
+        save_limits: &[usize],
+    ) -> anyhow::Result<Vec<i32>> {
         anyhow::ensure!(prompts.len() == self.cfg.batch);
+        anyhow::ensure!(save_limits.len() == prompts.len(), "one save limit per prompt");
         let s_len = prompts[0].len();
         anyhow::ensure!(prompts.iter().all(|p| p.len() == s_len), "ragged prompts");
         let info = &self.mr.rt.manifest.presets[&self.cfg.preset].clone();
@@ -687,9 +858,20 @@ impl Engine {
         // activations for the first sampled token. Restored bytes are
         // the exact f32 records a cold run would have placed in the
         // caches, so every recomputed chunk is bit-identical.
+        //
+        // With `store.pipelined_restore` (the default) the restore does
+        // not block up front: a dedicated worker streams `(layer, chunk)`
+        // units while compute runs, and only the residual the compute
+        // failed to hide is charged as `Phase::IoWait`. A torn chunk
+        // degrades at *chunk* granularity — recompute restarts from the
+        // tear, keeping everything restored before it.
         let store = self.store.clone();
         let mut reused = 0usize;
         let mut pinned: Vec<u64> = Vec::new();
+        let mut pipeline: Option<RestorePipeline> = None;
+        let store_io0 = store.as_ref().map(|s| s.io_snapshot());
+        let mut warm_attempted = false;
+        let mut prefill_wait = Duration::ZERO;
         if let Some(store) = &store {
             let mut matches = Vec::with_capacity(b);
             let mut min_len = usize::MAX;
@@ -714,83 +896,211 @@ impl Engine {
                     store.pin(m.entry);
                     pinned.push(m.entry);
                 }
-                let mut rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(b);
-                for m in &matches {
-                    match store.restore(m, l) {
-                        Ok(r) => rows.push(r),
-                        Err(e) => {
-                            // rung 4: a torn restore degrades to cold
-                            // prefill — correctness never depends on it
-                            crate::log_debug!("store restore failed ({e}); cold prefill");
-                            rows.clear();
-                            break;
+                warm_attempted = true;
+                if self.cfg.store.pipelined_restore {
+                    pipeline = Some(spawn_restore_worker(
+                        store.clone(),
+                        matches,
+                        l / chunk,
+                        chunk,
+                        self.spec.n_layers,
+                    ));
+                    reused = l;
+                } else {
+                    let io0 = store.io_snapshot();
+                    let mut rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::with_capacity(b);
+                    for m in &matches {
+                        match store.restore(m, l) {
+                            Ok(r) => rows.push(r),
+                            Err(e) => {
+                                // rung 4: a torn blocking restore degrades
+                                // to cold prefill — correctness never
+                                // depends on it
+                                crate::log_debug!("store restore failed ({e}); cold prefill");
+                                rows.clear();
+                                break;
+                            }
                         }
                     }
+                    if rows.len() == b {
+                        for (bi, layers) in rows.iter().enumerate() {
+                            for (layer, (k_rows, v_rows)) in layers.iter().enumerate() {
+                                scatter_chunk(
+                                    &mut k_caches[layer],
+                                    &mut v_caches[layer],
+                                    bi,
+                                    hkv,
+                                    d,
+                                    hd,
+                                    0,
+                                    l,
+                                    k_rows,
+                                    v_rows,
+                                );
+                            }
+                        }
+                        reused = l;
+                    }
+                    // nothing hides a blocking restore: the whole modeled
+                    // device delta is a prefill stall
+                    let stall = store.io_snapshot().read_busy_since(&io0);
+                    self.breakdown.add(Phase::IoWait, stall);
+                    if !self.cfg.real_time {
+                        self.clock.advance(stall);
+                    }
+                    prefill_wait += stall;
                 }
-                if rows.len() == b {
-                    for (bi, layers) in rows.iter().enumerate() {
-                        for (layer, (k_rows, v_rows)) in layers.iter().enumerate() {
-                            for t in 0..l {
-                                for g in 0..hkv {
-                                    for dd in 0..d {
-                                        *k_caches[layer].at_mut(&[bi, g, t, dd]) =
-                                            k_rows[t * hd + g * d + dd];
-                                        *v_caches[layer].at_mut(&[bi, g, t, dd]) =
-                                            v_rows[t * hd + g * d + dd];
+            }
+        }
+        let pipelined_warm = pipeline.is_some();
+
+        let mut x_last = Tensor::zeros(&[b, self.spec.d_model]);
+        'restart: loop {
+            let warm_chunks = reused / chunk;
+            let mut first_chunk = true;
+            let mut c0 = reused;
+            while c0 < s_len {
+                let mut toks = Vec::with_capacity(b * chunk);
+                for p in prompts {
+                    toks.extend_from_slice(&p[c0..c0 + chunk]);
+                }
+                let mut x = self
+                    .mr
+                    .embed_chunk(&TensorI32::from_vec(&[b, chunk], toks), chunk)?;
+                let start = vec![c0 as i32; b];
+                for layer in 0..self.spec.n_layers {
+                    if first_chunk {
+                        if let Some(pl) = pipeline.as_mut() {
+                            // this chunk attends over [0, c0) of this
+                            // layer only: block until the layer's warm
+                            // chunks are committed (later layers keep
+                            // streaming while earlier layers compute)
+                            while pl.committed[layer] < warm_chunks && !pl.done {
+                                let t_wait = Instant::now();
+                                let Ok(msg) = pl.rx.recv() else {
+                                    pl.done = true;
+                                    break;
+                                };
+                                if self.cfg.real_time {
+                                    // real mode: the stall is the wall
+                                    // time spent blocked on the worker
+                                    let w = t_wait.elapsed();
+                                    self.breakdown.add(Phase::IoWait, w);
+                                    prefill_wait += w;
+                                }
+                                let tear = self.commit_restore_msg(
+                                    pl,
+                                    msg,
+                                    chunk,
+                                    &mut k_caches,
+                                    &mut v_caches,
+                                    &mut prefill_wait,
+                                );
+                                if let Some(tc) = tear {
+                                    if tc * chunk < reused {
+                                        reused = tc * chunk;
+                                        continue 'restart;
                                     }
+                                }
+                            }
+                            if pl.committed[layer] < warm_chunks {
+                                // worker died mid-stream without a tear
+                                // notice: degrade to what every layer
+                                // actually committed
+                                let have = pl.committed.iter().copied().min().unwrap_or(0);
+                                reused = (have * chunk).min(reused);
+                                continue 'restart;
+                            }
+                        }
+                    }
+                    let (x1, k_chunk, v_chunk) = self.mr.prefill_block(
+                        layer,
+                        chunk,
+                        pncap,
+                        x,
+                        k_caches[layer].clone(),
+                        v_caches[layer].clone(),
+                        &start,
+                    )?;
+                    x = x1;
+                    for bi in 0..b {
+                        for g in 0..hkv {
+                            for t in 0..chunk {
+                                for dd in 0..d {
+                                    *k_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
+                                        k_chunk.at(&[bi, g, t, dd]);
+                                    *v_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
+                                        v_chunk.at(&[bi, g, t, dd]);
                                 }
                             }
                         }
                     }
-                    reused = l;
-                }
-            }
-        }
-
-        let mut x_last = Tensor::zeros(&[b, self.spec.d_model]);
-        for c0 in (reused..s_len).step_by(chunk) {
-            let mut toks = Vec::with_capacity(b * chunk);
-            for p in prompts {
-                toks.extend_from_slice(&p[c0..c0 + chunk]);
-            }
-            let mut x = self
-                .mr
-                .embed_chunk(&TensorI32::from_vec(&[b, chunk], toks), chunk)?;
-            let start = vec![c0 as i32; b];
-            for layer in 0..self.spec.n_layers {
-                let (x1, k_chunk, v_chunk) = self.mr.prefill_block(
-                    layer,
-                    chunk,
-                    pncap,
-                    x,
-                    k_caches[layer].clone(),
-                    v_caches[layer].clone(),
-                    &start,
-                )?;
-                x = x1;
-                for bi in 0..b {
-                    for g in 0..hkv {
-                        for t in 0..chunk {
-                            for dd in 0..d {
-                                *k_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
-                                    k_chunk.at(&[bi, g, t, dd]);
-                                *v_caches[layer].at_mut(&[bi, g, c0 + t, dd]) =
-                                    v_chunk.at(&[bi, g, t, dd]);
+                    // drain staged units opportunistically so later
+                    // layers' blocking waits shrink toward zero
+                    if let Some(pl) = pipeline.as_mut() {
+                        while let Ok(msg) = pl.rx.try_recv() {
+                            let tear = self.commit_restore_msg(
+                                pl,
+                                msg,
+                                chunk,
+                                &mut k_caches,
+                                &mut v_caches,
+                                &mut prefill_wait,
+                            );
+                            if let Some(tc) = tear {
+                                if tc * chunk < reused {
+                                    reused = tc * chunk;
+                                    continue 'restart;
+                                }
                             }
                         }
                     }
                 }
-            }
-            if c0 + chunk == s_len {
-                for bi in 0..b {
-                    x_last.row_mut(&[bi]).copy_from_slice(x.row(&[bi, chunk - 1]));
+                if c0 + chunk == s_len {
+                    for bi in 0..b {
+                        x_last.row_mut(&[bi]).copy_from_slice(x.row(&[bi, chunk - 1]));
+                    }
                 }
+                first_chunk = false;
+                c0 += chunk;
+            }
+            break;
+        }
+
+        // drain the stream to completion and reap the worker; any late
+        // units are bit-identical to what compute already produced, so
+        // committing them only settles the stall accounting
+        if let Some(mut pl) = pipeline.take() {
+            while !pl.done {
+                let Ok(msg) = pl.rx.recv() else { break };
+                let _ = self.commit_restore_msg(
+                    &mut pl,
+                    msg,
+                    chunk,
+                    &mut k_caches,
+                    &mut v_caches,
+                    &mut prefill_wait,
+                );
+            }
+            if let Some(h) = pl.handle.take() {
+                let _ = h.join();
+            }
+        }
+
+        // prefill-phase overlap accounting: how much of the store's
+        // modeled device read time did compute hide?
+        if warm_attempted {
+            if let (Some(store), Some(io0)) = (&store, &store_io0) {
+                self.prefill_store_busy += store.io_snapshot().read_busy_since(io0);
+                self.prefill_io_wait += prefill_wait;
             }
         }
 
         // ingest caches as token-major rows; with a store open, keep the
-        // rows to persist this prompt for future cross-request reuse
+        // rows to persist this prompt (only its unpadded prefix) for
+        // future cross-request reuse
         for bi in 0..b {
+            let save_n = save_limits[bi].min(s_len);
             let mut layer_rows: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
             for layer in 0..self.spec.n_layers {
                 let mut k_rows = vec![0.0f32; s_len * hd];
@@ -804,13 +1114,16 @@ impl Engine {
                     }
                 }
                 self.ingest_layer_rows(bi, layer, &k_rows, &v_rows)?;
-                if store.is_some() {
+                if store.is_some() && save_n > 0 {
                     layer_rows.push((k_rows, v_rows));
                 }
             }
             if let Some(store) = &store {
-                // a failed save is a lost optimization, not an error
-                if let Err(e) = store.save(&prompts[bi], &layer_rows) {
+                if save_n == 0 {
+                    // all-zero batch-padding row: never persist it
+                    store.note_pad_skip();
+                } else if let Err(e) = store.save(&prompts[bi][..save_n], &layer_rows) {
+                    // a failed save is a lost optimization, not an error
                     crate::log_debug!("store save failed for seq {bi}: {e}");
                 }
             }
@@ -821,6 +1134,12 @@ impl Engine {
             for key in pinned {
                 store.unpin(key);
             }
+            if pipelined_warm {
+                // blocking restores credit inside `restore`; the
+                // pipelined path credits only the region that survived
+                // any tear and was actually committed
+                store.credit_restored(reused * b);
+            }
         }
         self.reused_prefix_tokens += (reused * b) as u64;
         let (first, _) = self.mr.logits_argmax(x_last)?;
@@ -828,6 +1147,80 @@ impl Engine {
             self.seqs[bi].last_token = t;
         }
         Ok(first)
+    }
+
+    /// Apply one restore-worker message: commit a staged `(layer, chunk)`
+    /// unit into the prefill caches — charging the virtual-clock residual
+    /// stall compute failed to hide, mirroring `await_loads` — or
+    /// surface a tear. Returns the torn chunk index so the caller can
+    /// degrade at chunk granularity.
+    fn commit_restore_msg(
+        &mut self,
+        pl: &mut RestorePipeline,
+        msg: RestoreMsg,
+        chunk: usize,
+        k_caches: &mut [Tensor],
+        v_caches: &mut [Tensor],
+        prefill_wait: &mut Duration,
+    ) -> Option<usize> {
+        match msg {
+            RestoreMsg::Unit { layer, chunk: c, per_seq, io_time, issued_at } => {
+                if !self.cfg.real_time {
+                    // virtual-threaded accounting: only the residual the
+                    // worker has not already spent in wall time
+                    let stall = io_time.saturating_sub(issued_at.elapsed());
+                    self.breakdown.add(Phase::IoWait, stall);
+                    self.clock.advance(stall);
+                    *prefill_wait += stall;
+                }
+                let (hkv, d) = (self.spec.n_kv_heads, self.spec.head_dim);
+                let hd = self.spec.kv_flat_dim();
+                for (bi, (k_rows, v_rows)) in per_seq.iter().enumerate() {
+                    scatter_chunk(
+                        &mut k_caches[layer],
+                        &mut v_caches[layer],
+                        bi,
+                        hkv,
+                        d,
+                        hd,
+                        c * chunk,
+                        chunk,
+                        k_rows,
+                        v_rows,
+                    );
+                }
+                pl.committed[layer] = pl.committed[layer].max(c + 1);
+                None
+            }
+            RestoreMsg::Torn { chunk: c } => Some(c),
+            RestoreMsg::Done => {
+                pl.done = true;
+                None
+            }
+        }
+    }
+
+    /// Working-cache counterpart of the store scrub: re-verify every
+    /// sequence's flushed KV groups against the integrity map via
+    /// [`KvManager::scrub`]. The router drives this from the same idle
+    /// ticks as `store.maintain()`. Returns `(clean_records,
+    /// unreadable_seqs)`.
+    pub fn scrub_working(&self) -> (usize, usize) {
+        if self.cfg.policy.memory_resident() {
+            return (0, 0); // nothing on disk to verify
+        }
+        let mut clean = 0usize;
+        let mut failed = 0usize;
+        for s in &self.seqs {
+            match self.manager.scrub(&s.kv) {
+                Ok(n) => clean += n,
+                Err(e) => {
+                    crate::log_debug!("working-cache scrub: sequence unreadable ({e})");
+                    failed += 1;
+                }
+            }
+        }
+        (clean, failed)
     }
 
     /// Persist every sequence's flushed KV groups into the store under a
@@ -1013,6 +1406,7 @@ impl Engine {
                 prefetch: self.prefetcher.summary(),
                 degraded_steps: self.degraded,
                 reused_prefix_tokens: self.reused_prefix_tokens,
+                prefill_io_overlap: self.prefill_io_overlap_ratio(),
             },
             xs,
             token_hist,

@@ -5,6 +5,10 @@
 //! callers submit `Request`s from any thread; a dedicated engine thread
 //! batches them (Batcher), runs prefill + decode waves, and returns
 //! `Completion`s. Used by the TCP server example and the serve command.
+//!
+//! A failed wave is contained, not fatal: its requests get error
+//! completions (`Completion::error`) and the loop keeps serving — one
+//! oversized or poisoned wave must never kill the session.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -12,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Engine, EngineConfig};
+use crate::metrics::DecodeStats;
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::store::PersistentStore;
 use crate::util::json::Json;
@@ -23,6 +28,9 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     pub latency_ms: f64,
     pub batch: usize,
+    /// Set when this request's wave failed: `tokens` is empty and the
+    /// request was not served (the session itself keeps running).
+    pub error: Option<String>,
 }
 
 enum RouterMsg {
@@ -34,17 +42,46 @@ enum RouterMsg {
     Stop,
 }
 
+/// Session-cumulative serving counters. Wave engines are short-lived,
+/// so every wave folds its telemetry in here — the stats line then
+/// reports one consistent scope (cumulative, like the store counters)
+/// instead of mixing "last wave" with "whole session".
+#[derive(Default)]
+struct SessionStats {
+    waves: u64,
+    /// Waves that failed and were contained (error completions issued).
+    wave_errors: u64,
+    /// Requests the batcher refused at the door (answered with an error
+    /// completion, never silently dropped).
+    rejected: u64,
+    reused_prefix_tokens: u64,
+    degraded_steps: u64,
+}
+
 /// Snapshot the engine thread replies with on `RouterMsg::Stats`.
-fn stats_json(last_wave: &Option<Json>, store: Option<&Arc<PersistentStore>>) -> Json {
+/// `last_wave` carries the wave-scoped health fields (breaker state,
+/// overlap ratios); everything counted is session-cumulative.
+fn stats_json(
+    session: &SessionStats,
+    last_wave: &Option<Json>,
+    store: Option<&Arc<PersistentStore>>,
+) -> Json {
     let mut j = match last_wave {
         Some(w) => w.clone(),
         None => Json::from_pairs(vec![
             ("breaker", "closed".into()),
             ("io_overlap_ratio", 0.0f64.into()),
-            ("degraded_steps", 0usize.into()),
-            ("reused_prefix_tokens", 0usize.into()),
+            ("prefill_io_overlap_ratio", Json::Null),
         ]),
     };
+    j.set("waves", (session.waves as usize).into());
+    j.set("wave_errors", (session.wave_errors as usize).into());
+    j.set("rejected", (session.rejected as usize).into());
+    j.set(
+        "reused_prefix_tokens",
+        (session.reused_prefix_tokens as usize).into(),
+    );
+    j.set("degraded_steps", (session.degraded_steps as usize).into());
     match store {
         Some(s) => {
             j.set("store", s.counters().to_json());
@@ -86,6 +123,14 @@ impl Router {
                 // so cross-request prefix reuse spans the whole session.
                 let mut store: Option<Arc<PersistentStore>> = None;
                 let mut last_wave: Option<Json> = None;
+                let mut session = SessionStats::default();
+                // The last successful wave's engine sticks around between
+                // waves so idle ticks can scrub its working cache on the
+                // same cadence as `store.maintain()`.
+                let mut last_engine: Option<Engine> = None;
+                let scrub_interval =
+                    Duration::from_secs_f64(engine_cfg.store.scrub_interval_s.max(0.0));
+                let mut next_kv_scrub = Instant::now() + scrub_interval;
                 loop {
                     // drain control messages (wait with a timeout when the
                     // queue is empty so idle gaps fund store maintenance)
@@ -93,8 +138,16 @@ impl Router {
                         match req_rx.recv_timeout(Duration::from_millis(100)) {
                             Ok(m) => Some(m),
                             Err(RecvTimeoutError::Timeout) => {
-                                if let Some(s) = &store {
-                                    s.maintain(Instant::now());
+                                // idle tick: store scrub and the
+                                // working-cache scrub share the cadence
+                                let now = Instant::now();
+                                let store_pass =
+                                    store.as_ref().is_some_and(|s| s.maintain(now).is_some());
+                                if store_pass || now >= next_kv_scrub {
+                                    if let Some(eng) = &last_engine {
+                                        let _ = eng.scrub_working();
+                                    }
+                                    next_kv_scrub = now + scrub_interval;
                                 }
                                 continue;
                             }
@@ -105,13 +158,33 @@ impl Router {
                     };
                     match msg {
                         Some(RouterMsg::Submit(r)) => {
-                            arrivals.insert(r.id, Instant::now());
-                            batcher.push(r, t0.elapsed().as_secs_f64());
+                            let (rid, rctx) = (r.id, r.context);
+                            if batcher.push(r, t0.elapsed().as_secs_f64()) {
+                                arrivals.insert(rid, Instant::now());
+                            } else {
+                                // refused at the door (context over the
+                                // batcher's provision): answer instead of
+                                // dropping it silently — a caller counting
+                                // completions must never hang
+                                session.rejected += 1;
+                                let c = Completion {
+                                    id: rid,
+                                    tokens: Vec::new(),
+                                    latency_ms: 0.0,
+                                    batch: 0,
+                                    error: Some(format!(
+                                        "request context {rctx} over the batcher limit"
+                                    )),
+                                };
+                                if done_tx.send(c).is_err() {
+                                    return Ok(());
+                                }
+                            }
                             continue; // look for more queued submissions
                         }
                         Some(RouterMsg::Flush) => flushing = true,
                         Some(RouterMsg::Stats(reply)) => {
-                            let _ = reply.send(stats_json(&last_wave, store.as_ref()));
+                            let _ = reply.send(stats_json(&session, &last_wave, store.as_ref()));
                             continue;
                         }
                         Some(RouterMsg::Stop) => break,
@@ -129,46 +202,85 @@ impl Router {
                         continue;
                     };
 
-                    // run the wave: shared context length (pad prompts to
-                    // the longest, multiple of the prefill chunk)
-                    let mut cfg = engine_cfg.clone();
-                    cfg.batch = wave.batch;
-                    let mut engine = Engine::with_store(rt.clone(), cfg, store.clone())?;
-                    let chunk = rt.manifest.presets[&engine_cfg.preset].prefill_chunk;
-                    let vocab = rt.manifest.presets[&engine_cfg.preset].spec.vocab;
-                    let ctx_max = wave
-                        .requests
-                        .iter()
-                        .map(|r| r.context)
-                        .max()
-                        .unwrap_or(chunk)
-                        .div_ceil(chunk)
-                        * chunk;
-                    let mut prompts: Vec<Vec<i32>> = wave
-                        .requests
-                        .iter()
-                        .map(|r| {
+                    // Run the wave: shared context length (pad prompts to
+                    // the longest, multiple of the prefill chunk). Only the
+                    // unpadded request prefix may reach the store — padded
+                    // tails and all-zero filler rows would pollute it.
+                    session.waves += 1;
+                    let wave_res = (|| -> anyhow::Result<(Engine, Vec<i32>, DecodeStats, Vec<Vec<i32>>)> {
+                        let mut cfg = engine_cfg.clone();
+                        cfg.batch = wave.batch;
+                        let mut engine = Engine::with_store(rt.clone(), cfg, store.clone())?;
+                        let chunk = rt.manifest.presets[&engine_cfg.preset].prefill_chunk;
+                        let vocab = rt.manifest.presets[&engine_cfg.preset].spec.vocab;
+                        let ctx_max = wave
+                            .requests
+                            .iter()
+                            .map(|r| r.context)
+                            .max()
+                            .unwrap_or(chunk)
+                            .div_ceil(chunk)
+                            * chunk;
+                        let mut prompts: Vec<Vec<i32>> = Vec::with_capacity(wave.batch);
+                        let mut save_limits: Vec<usize> = Vec::with_capacity(wave.batch);
+                        for r in &wave.requests {
                             let mut p = prompt_tokens(r, vocab);
+                            save_limits.push(p.len());
                             p.resize(ctx_max, 0);
-                            p
-                        })
-                        .collect();
-                    while prompts.len() < wave.batch {
-                        prompts.push(vec![0; ctx_max]); // padding rows
-                    }
-                    let first = engine.prefill(&prompts)?;
-                    let steps = wave.requests.iter().map(|r| r.decode).max().unwrap_or(1);
-                    let (stats, _, tok_hist) = engine.decode(steps.saturating_sub(1), false, None)?;
+                            prompts.push(p);
+                        }
+                        while prompts.len() < wave.batch {
+                            prompts.push(vec![0; ctx_max]); // padding rows
+                            save_limits.push(0); // …which must never be saved
+                        }
+                        let first = engine.prefill_with_save_limits(&prompts, &save_limits)?;
+                        let steps = wave.requests.iter().map(|r| r.decode).max().unwrap_or(1);
+                        let (stats, _, tok_hist) =
+                            engine.decode(steps.saturating_sub(1), false, None)?;
+                        Ok((engine, first, stats, tok_hist))
+                    })();
+
+                    let (engine, first, stats, tok_hist) = match wave_res {
+                        Ok(ok) => ok,
+                        Err(e) => {
+                            // contain the failure: error completions for
+                            // this wave's requests, session keeps serving
+                            session.wave_errors += 1;
+                            crate::log_info!("wave failed ({e}); emitting error completions");
+                            let msg = e.to_string();
+                            for req in &wave.requests {
+                                let latency_ms = arrivals
+                                    .remove(&req.id)
+                                    .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                                    .unwrap_or(0.0);
+                                let c = Completion {
+                                    id: req.id,
+                                    tokens: Vec::new(),
+                                    latency_ms,
+                                    batch: wave.batch,
+                                    error: Some(msg.clone()),
+                                };
+                                if done_tx.send(c).is_err() {
+                                    return Ok(());
+                                }
+                            }
+                            continue;
+                        }
+                    };
                     if store.is_none() {
                         store = engine.store();
                     }
+                    session.reused_prefix_tokens += stats.reused_prefix_tokens;
+                    session.degraded_steps += stats.degraded_steps;
                     last_wave = Some(Json::from_pairs(vec![
                         ("breaker", engine.breaker_state().name().into()),
                         ("io_overlap_ratio", engine.io_overlap_ratio().into()),
-                        ("degraded_steps", (stats.degraded_steps as usize).into()),
                         (
-                            "reused_prefix_tokens",
-                            (stats.reused_prefix_tokens as usize).into(),
+                            "prefill_io_overlap_ratio",
+                            match stats.prefill_io_overlap {
+                                Some(r) => r.into(),
+                                None => Json::Null,
+                            },
                         ),
                     ]));
 
@@ -187,12 +299,14 @@ impl Router {
                                 tokens,
                                 latency_ms,
                                 batch: wave.batch,
+                                error: None,
                             })
                             .is_err()
                         {
                             return Ok(());
                         }
                     }
+                    last_engine = Some(engine);
                 }
                 Ok(())
             })
@@ -214,9 +328,10 @@ impl Router {
     }
 
     /// Health/stats snapshot from the engine thread: circuit-breaker
-    /// state, I/O overlap ratio, degraded steps, reused prefix tokens,
-    /// and persistent-store counters (`store: null` when disabled).
-    /// `None` when the engine thread is gone or busy past the timeout.
+    /// state and overlap ratios from the last wave, session-cumulative
+    /// wave/error/reuse/degradation counters, and persistent-store
+    /// counters (`store: null` when disabled). `None` when the engine
+    /// thread is gone or busy past the timeout.
     pub fn stats(&self) -> Option<Json> {
         let (reply_tx, reply_rx) = channel::<Json>();
         self.tx.send(RouterMsg::Stats(reply_tx)).ok()?;

@@ -43,7 +43,13 @@
 //!    `workers: 0` path (half-open probes recover once the device
 //!    heals); a plan that still fails makes the *engine* fall back to
 //!    attention over the resident critical cache for that layer and
-//!    counts a degraded step in the metrics instead of aborting.
+//!    counts a degraded step in the metrics instead of aborting. The
+//!    persistent store's warm-start restores degrade the same way but
+//!    at *chunk* granularity: a torn record during a pipelined restore
+//!    (`store::PersistentStore::restore_chunk`) discards only the warm
+//!    region from that prefill chunk onward — everything restored
+//!    before the tear stays reused, and recompute (always bit-identical
+//!    to the restore) covers the rest.
 //!
 //! Only non-retryable errors (`OutOfBounds` logic bugs, `QueueClosed`
 //! shutdown) propagate out of the ladder.

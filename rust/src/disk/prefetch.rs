@@ -41,6 +41,13 @@
 //! The workers touch only [`Backend`](super::Backend) + staging memory;
 //! nothing device- or runtime-bound (`Rc<PjrtRuntime>` etc.) crosses a
 //! thread boundary.
+//!
+//! This pool overlaps *decode* I/O with compute. Prefill has a second,
+//! independent overlapped stream: the engine's store-restore worker
+//! (`coordinator::engine`) streams persistent-store chunks under prefill
+//! compute with the same thread-boundary rule and the same residual
+//! `Phase::IoWait` accounting convention — only the stall compute failed
+//! to hide is charged.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -136,6 +136,13 @@ impl DiskSnapshot {
         self.coalesce_extents_in as f64 / self.coalesce_runs_out as f64
     }
 
+    /// Device read-busy time accrued since an `earlier` snapshot of the
+    /// same stats source — the denominator of the prefill-phase overlap
+    /// ratio (how much store-restore device time a warm start incurred).
+    pub fn read_busy_since(&self, earlier: &DiskSnapshot) -> Duration {
+        self.read_busy.saturating_sub(earlier.read_busy)
+    }
+
     /// Effective bandwidth relative to `peak_bw` over the busy period —
     /// the "I/O utilization" the paper annotates in Fig. 12.
     pub fn io_utilization(&self, peak_bw: f64) -> f64 {
@@ -201,6 +208,18 @@ mod tests {
         assert_eq!(snap.corruptions_detected, 1);
         s.reset();
         assert_eq!(s.snapshot().read_retries, 0);
+    }
+
+    #[test]
+    fn read_busy_since_is_a_saturating_delta() {
+        let s = DiskStats::default();
+        s.record_read(512, 4096, Duration::from_micros(100));
+        let before = s.snapshot();
+        s.record_read(512, 4096, Duration::from_micros(250));
+        let after = s.snapshot();
+        assert_eq!(after.read_busy_since(&before), Duration::from_micros(250));
+        // reversed order saturates to zero instead of panicking
+        assert_eq!(before.read_busy_since(&after), Duration::ZERO);
     }
 
     #[test]

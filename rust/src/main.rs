@@ -20,6 +20,15 @@
 //!   --store-capacity MIB        store capacity before LRU eviction (256)
 //!   --store-scrub-interval SEC  maintenance scrub deadline (5.0)
 //!   --store-scrub-budget N      entries scrubbed per idle slice (4)
+//!   --store-pipelined-restore on|off
+//!                               stream warm-start restores under prefill
+//!                               compute (on) or block up front (off)
+//!
+//! Serve flags:
+//!   --batch-max-context N       batcher admission limit (defaults to
+//!                               --max-context; set higher to exercise
+//!                               contained wave errors)
+//!   --max-conns N               stop after serving N connections
 
 use kvswap::baselines::{configure, Budget};
 use kvswap::config::{FaultConfig, KvSwapConfig, PrefetchConfig, RetryConfig, StoreConfig};
@@ -111,6 +120,10 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
             * 1024.0) as u64,
         scrub_interval_s: args.f64_or("store-scrub-interval", store_default.scrub_interval_s),
         scrub_budget: args.usize_or("store-scrub-budget", store_default.scrub_budget),
+        pipelined_restore: !matches!(
+            args.get("store-pipelined-restore"),
+            Some("off") | Some("false") | Some("0")
+        ),
     };
     let retry_default = RetryConfig::default();
     let retry = RetryConfig {
@@ -330,7 +343,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batcher = BatcherConfig {
         supported: args.usize_list_or("batches", &[1, 2, 4, 8]),
         linger_s: args.f64_or("linger", 0.05),
-        max_context: cfg.max_context,
+        // letting the batcher admit more than the engine is provisioned
+        // for turns oversized requests into contained wave errors — the
+        // CI fault smoke drives that path deliberately
+        max_context: args.usize_or("batch-max-context", cfg.max_context),
     };
     let router = Router::spawn(default_artifacts_dir(), cfg, batcher);
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());

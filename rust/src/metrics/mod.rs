@@ -133,6 +133,10 @@ pub struct DecodeStats {
     /// recomputed during prefill (summed over batch rows). 0 when the
     /// store is disabled or no request shared a stored prefix.
     pub reused_prefix_tokens: u64,
+    /// Fraction of the persistent store's device read time hidden behind
+    /// prefill compute by warm-start restores (`None` when no warm
+    /// restore ran; blocking restores report `Some(0.0)`).
+    pub prefill_io_overlap: Option<f64>,
 }
 
 impl DecodeStats {
@@ -243,6 +247,7 @@ mod tests {
             prefetch: PrefetchSummary::default(),
             degraded_steps: 0,
             reused_prefix_tokens: 0,
+            prefill_io_overlap: None,
         };
         assert!((s.tokens_per_sec() - 25.0).abs() < 1e-9);
     }

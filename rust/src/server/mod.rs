@@ -4,6 +4,8 @@
 //!           (synthetic prompt derived from `seed`; or pass explicit
 //!            "tokens": [...])
 //! Response: {"id": 1, "tokens": [...], "latency_ms": 12.3, "batch": 4}
+//!           (a request whose wave failed gets "tokens": [] plus an
+//!            "error" field — the session keeps serving)
 //!
 //! Control lines: "flush" dispatches queued requests immediately,
 //! "stats" returns a one-line health JSON (circuit-breaker state,
@@ -54,7 +56,7 @@ pub fn parse_request(line: &str, fallback_id: u64) -> Result<Request, String> {
 }
 
 pub fn completion_to_json(c: &Completion) -> Json {
-    Json::from_pairs(vec![
+    let mut j = Json::from_pairs(vec![
         ("id", (c.id as usize).into()),
         (
             "tokens",
@@ -62,7 +64,13 @@ pub fn completion_to_json(c: &Completion) -> Json {
         ),
         ("latency_ms", c.latency_ms.into()),
         ("batch", c.batch.into()),
-    ])
+    ]);
+    // only failed waves carry an error field, so healthy responses keep
+    // their existing shape
+    if let Some(e) = &c.error {
+        j.set("error", e.as_str().into());
+    }
+    j
 }
 
 /// Serve one connection: read requests until EOF (or "flush"/"quit"
@@ -206,6 +214,7 @@ mod tests {
             tokens: vec![1, 2, 3],
             latency_ms: 4.5,
             batch: 2,
+            error: None,
         };
         let j = completion_to_json(&c);
         let s = j.to_string();
@@ -213,5 +222,25 @@ mod tests {
         assert_eq!(back.usize_or("id", 0), 7);
         assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(back.f64_or("latency_ms", 0.0), 4.5);
+        // a clean completion has no error field at all
+        assert!(back.get("error").is_none());
+    }
+
+    #[test]
+    fn completion_json_carries_wave_error() {
+        let c = Completion {
+            id: 9,
+            tokens: vec![],
+            latency_ms: 1.0,
+            batch: 4,
+            error: Some("prompt too long for prefill artifact".into()),
+        };
+        let back = Json::parse(&completion_to_json(&c).to_string()).unwrap();
+        assert_eq!(back.usize_or("id", 0), 9);
+        assert_eq!(back.get("tokens").unwrap().as_arr().unwrap().len(), 0);
+        assert!(back
+            .get("error")
+            .and_then(|e| e.as_str())
+            .is_some_and(|e| e.contains("prompt too long")));
     }
 }

@@ -38,10 +38,16 @@
 //!    [`CorruptionSite`](maintain::CorruptionSite) to the manifest's
 //!    persisted corruption log for post-mortem. One poisoned prompt
 //!    never blocks the store.
-//! 4. **Degrade** — a failed restore falls back to cold prefill
-//!    (correctness never depends on the store); a failed save logs and
-//!    skips (the store is an accelerator, not a durability contract);
-//!    an over-capacity save with everything pinned skips rather than
+//! 4. **Degrade** — a failed restore falls back to recompute, and the
+//!    fallback is *chunk-granular*: the pipelined warm-start path
+//!    ([`PersistentStore::restore_chunk`]) streams `(layer, chunk)`
+//!    units into prefill, so a torn record only discards the warm
+//!    region from that chunk onward — prefill recomputes from the tear
+//!    instead of throwing away every chunk restored before it. A fully
+//!    blocking restore that fails degrades to cold prefill (correctness
+//!    never depends on the store); a failed save logs and skips (the
+//!    store is an accelerator, not a durability contract); an
+//!    over-capacity save with everything pinned skips rather than
 //!    evicting under a reader.
 //!
 //! [`IntegrityMap`]: crate::disk::IntegrityMap
@@ -53,11 +59,12 @@ pub mod manifest;
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{FaultConfig, StoreConfig};
 use crate::disk::{
-    relock, Backend, DiskError, DiskProfile, FaultBackend, FileBackend, MemBackend, SimDisk,
+    relock, Backend, DiskError, DiskProfile, DiskSnapshot, FaultBackend, FileBackend, MemBackend,
+    SimDisk,
 };
 use crate::kvcache::DiskLayout;
 use crate::util::json::Json;
@@ -66,6 +73,24 @@ pub use evict::Lru;
 pub use index::{chain_hash, ChainHasher, PrefixIndex};
 pub use maintain::{CorruptionSite, Maintainer, ScrubReport};
 pub use manifest::{StoreEntry, StoreManifest, DATA_FILE, MANIFEST_FILE, MANIFEST_TMP};
+
+/// One restored `(layer, token-range)` slice of a stored entry — the
+/// unit the pipelined warm-start path streams into prefill while
+/// compute runs.
+#[derive(Debug, Clone)]
+pub struct RestoredChunk {
+    pub layer: usize,
+    /// First token of the range (group-aligned).
+    pub start: usize,
+    pub tokens: usize,
+    /// Token-major flat rows, `tokens * hd` floats each — bit-identical
+    /// to what was saved.
+    pub k_rows: Vec<f32>,
+    pub v_rows: Vec<f32>,
+    /// Modeled device time of the records read for this slice; the
+    /// engine charges only the residual that compute failed to hide.
+    pub io_time: Duration,
+}
 
 /// A confirmed stored prefix for an incoming prompt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,6 +110,9 @@ pub struct StoreCounters {
     pub restored_tokens: u64,
     pub saves: u64,
     pub save_skips: u64,
+    /// Serving-batch padding rows whose save was skipped outright
+    /// (all-zero filler must never pollute the store).
+    pub pad_skips: u64,
     pub evictions: u64,
     pub corruptions: u64,
     pub healed: u64,
@@ -101,6 +129,7 @@ impl StoreCounters {
             ("restored_tokens", (self.restored_tokens as usize).into()),
             ("saves", (self.saves as usize).into()),
             ("save_skips", (self.save_skips as usize).into()),
+            ("pad_skips", (self.pad_skips as usize).into()),
             ("evictions", (self.evictions as usize).into()),
             ("corruptions", (self.corruptions as usize).into()),
             ("healed", (self.healed as usize).into()),
@@ -309,6 +338,43 @@ impl PersistentStore {
             n_tokens > 0 && n_tokens % g == 0 && n_tokens <= m.tokens,
             "restore length {n_tokens} not a group multiple within the match"
         );
+        let mut out = Vec::with_capacity(self.layout.n_layers);
+        for layer in 0..self.layout.n_layers {
+            let c = self.restore_chunk(m, layer, 0, n_tokens)?;
+            out.push((c.k_rows, c.v_rows));
+        }
+        self.credit_restored(n_tokens);
+        Ok(out)
+    }
+
+    /// Read back tokens `[start, start + n_tokens)` of one layer of a
+    /// matched entry — the incremental unit of a pipelined restore. The
+    /// range must be group-aligned and inside the match. Every record
+    /// gets the same verify/retry ladder as a full restore; a record
+    /// that stays bad records a corruption site and errors, and the
+    /// caller degrades at *chunk* granularity (recompute from this
+    /// chunk onward, keeping everything restored before it).
+    ///
+    /// Does **not** bump `restored_tokens`: pipelined callers call
+    /// [`credit_restored`](Self::credit_restored) once with what
+    /// actually survived into the committed warm region.
+    pub fn restore_chunk(
+        &self,
+        m: &PrefixMatch,
+        layer: usize,
+        start: usize,
+        n_tokens: usize,
+    ) -> anyhow::Result<RestoredChunk> {
+        let g = self.layout.group;
+        anyhow::ensure!(
+            layer < self.layout.n_layers,
+            "restore layer {layer} out of range"
+        );
+        anyhow::ensure!(
+            n_tokens > 0 && start % g == 0 && n_tokens % g == 0 && start + n_tokens <= m.tokens,
+            "restore range [{start}, {}) not group-aligned within the match",
+            start + n_tokens
+        );
         let slot = {
             let inner = relock(&self.inner);
             inner
@@ -318,17 +384,17 @@ impl PersistentStore {
                 .map(|e| e.slot)
                 .ok_or_else(|| anyhow::anyhow!("store entry {:016x} vanished", m.entry))?
         };
-        let n_groups = n_tokens / g;
         let payload = self.layout.group_payload_bytes() as usize;
-        let mut out = Vec::with_capacity(self.layout.n_layers);
-        for layer in 0..self.layout.n_layers {
-            let hd = self.layout.hd;
-            let mut k_rows = Vec::with_capacity(n_tokens * hd);
-            let mut v_rows = Vec::with_capacity(n_tokens * hd);
-            for gi in 0..n_groups {
-                let off = self.layout.offset(slot, layer, gi);
-                let mut buf = vec![0u8; payload];
-                if let Err(e) = self.read_record(off, &mut buf) {
+        let hd = self.layout.hd;
+        let mut k_rows = Vec::with_capacity(n_tokens * hd);
+        let mut v_rows = Vec::with_capacity(n_tokens * hd);
+        let mut io_time = Duration::ZERO;
+        for gi in start / g..(start + n_tokens) / g {
+            let off = self.layout.offset(slot, layer, gi);
+            let mut buf = vec![0u8; payload];
+            match self.read_record(off, &mut buf) {
+                Ok(d) => io_time += d,
+                Err(e) => {
                     if matches!(e, DiskError::Corrupt { .. }) {
                         self.record_corruption(m.entry, layer, gi, off, &e);
                     }
@@ -337,14 +403,40 @@ impl PersistentStore {
                         m.entry
                     ));
                 }
-                let (k, v) = self.layout.decode_group(&buf);
-                k_rows.extend_from_slice(&k);
-                v_rows.extend_from_slice(&v);
             }
-            out.push((k_rows, v_rows));
+            let (k, v) = self.layout.decode_group(&buf);
+            k_rows.extend_from_slice(&k);
+            v_rows.extend_from_slice(&v);
         }
+        Ok(RestoredChunk {
+            layer,
+            start,
+            tokens: n_tokens,
+            k_rows,
+            v_rows,
+            io_time,
+        })
+    }
+
+    /// Count `n_tokens` as served from the store. [`restore`](Self::restore)
+    /// credits automatically; pipelined callers credit once after the
+    /// warm region is actually committed, so a torn, partially-discarded
+    /// restore only counts what survived.
+    pub fn credit_restored(&self, n_tokens: usize) {
         relock(&self.inner).counters.restored_tokens += n_tokens as u64;
-        Ok(out)
+    }
+
+    /// Count a serving-batch padding row whose save was skipped (ragged
+    /// waves pad with all-zero rows; those must never reach the store).
+    pub fn note_pad_skip(&self) {
+        relock(&self.inner).counters.pad_skips += 1;
+    }
+
+    /// Snapshot of the store's own device counters (distinct from the
+    /// engine's working disk). Prefill overlap accounting reads the
+    /// read-busy delta across a warm start.
+    pub fn io_snapshot(&self) -> DiskSnapshot {
+        self.disk.stats().snapshot()
     }
 
     /// Persist one prompt's prefill output (per-layer flat `(k, v)` rows,
@@ -422,14 +514,20 @@ impl PersistentStore {
                 };
                 self.evict_locked(&mut inner, victim);
             }
-            match inner.free_slots.pop() {
+            let s = match inner.free_slots.pop() {
                 Some(s) => s,
                 None => {
                     let s = inner.next_slot;
                     inner.next_slot += 1;
                     s
                 }
-            }
+            };
+            // Reserve the bytes at admission, while the capacity check
+            // still holds: the record writes below run lock-free, and a
+            // concurrent save must see this claim or racing writers all
+            // pass the check and overshoot `capacity_bytes`.
+            inner.stored_bytes += bytes_new;
+            s
         };
 
         // write records lock-free (the slot is reserved; nobody else
@@ -445,6 +543,8 @@ impl PersistentStore {
                 if let Err(e) = self.disk.write(off, &rec) {
                     let mut inner = relock(&self.inner);
                     inner.free_slots.push(slot);
+                    // roll the admission-time reservation back
+                    inner.stored_bytes = inner.stored_bytes.saturating_sub(bytes_new);
                     inner.counters.save_skips += 1;
                     return Err(anyhow::anyhow!("store save write failed: {e}"));
                 }
@@ -465,7 +565,7 @@ impl PersistentStore {
             },
         );
         inner.index.insert(key, &tokens[..full], g);
-        inner.stored_bytes += bytes_new;
+        // stored_bytes was already charged at admission
         inner.counters.saves += 1;
         self.persist_locked(&inner)?;
         Ok(full)
@@ -565,13 +665,16 @@ impl PersistentStore {
         rep
     }
 
-    fn read_record(&self, off: u64, buf: &mut [u8]) -> Result<(), DiskError> {
+    /// One verified record read with a single heal retry. Returns the
+    /// modeled device time of the read that succeeded (a failed first
+    /// attempt contributes none — it never delivered the bytes).
+    fn read_record(&self, off: u64, buf: &mut [u8]) -> Result<Duration, DiskError> {
         match self.disk.read(off, buf) {
-            Ok(_) => Ok(()),
+            Ok(d) => Ok(d),
             Err(e) if e.is_retryable() => match self.disk.read(off, buf) {
-                Ok(_) => {
+                Ok(d) => {
                     relock(&self.inner).counters.healed += 1;
-                    Ok(())
+                    Ok(d)
                 }
                 Err(e2) => Err(e2),
             },

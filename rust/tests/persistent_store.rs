@@ -28,6 +28,7 @@ fn cfg_mem(capacity: u64) -> StoreConfig {
         capacity_bytes: capacity,
         scrub_interval_s: 3600.0,
         scrub_budget: 4,
+        pipelined_restore: true,
     }
 }
 
@@ -252,6 +253,145 @@ fn scrub_heals_transient_faults_without_quarantine() {
     assert_eq!(rep.quarantined, 0);
     assert_eq!(store.entries(), 1);
     assert_eq!(store.counters().healed, 1);
+}
+
+/// Backend wrapper that makes writes slow, widening the save's
+/// admission→commit window so racing saves actually overlap in it.
+struct SlowWrites(Arc<MemBackend>);
+
+impl Backend for SlowWrites {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> kvswap::disk::DiskResult<()> {
+        self.0.read_at(offset, buf)
+    }
+    fn write_at(&self, offset: u64, data: &[u8]) -> kvswap::disk::DiskResult<()> {
+        std::thread::sleep(Duration::from_millis(2));
+        self.0.write_at(offset, data)
+    }
+    fn len(&self) -> u64 {
+        self.0.len()
+    }
+}
+
+#[test]
+fn concurrent_saves_never_overshoot_capacity() {
+    let lo = layout();
+    // room for exactly two 1024-B entries; four threads race twelve
+    // distinct saves into it
+    let store = Arc::new(
+        PersistentStore::open_with_backend(
+            &cfg_mem(2048),
+            DiskProfile::nvme(),
+            lo.clone(),
+            Arc::new(SlowWrites(Arc::new(MemBackend::new()))),
+        )
+        .unwrap(),
+    );
+    let n_threads = 4;
+    let rounds = 3u64;
+    let barrier = Arc::new(std::sync::Barrier::new(n_threads + 1));
+    let mut handles = Vec::new();
+    for t in 0..n_threads as u64 {
+        let (store, lo, barrier) = (store.clone(), lo.clone(), barrier.clone());
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            for round in 0..rounds {
+                let seed = 100 + t * 10 + round;
+                store.save(&tokens_for(8, seed), &rows_for(&lo, 8, seed)).unwrap();
+            }
+        }));
+    }
+    barrier.wait();
+    // capacity is an invariant DURING the race, not only after it:
+    // bytes are reserved at admission (inside the capacity check), so a
+    // save mid-write can never push the account past capacity, and its
+    // uncommitted reservation is not evictable by a racing admission
+    while handles.iter().any(|h| !h.is_finished()) {
+        assert!(store.stored_bytes() <= store.capacity_bytes());
+        std::thread::yield_now();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(store.stored_bytes() <= store.capacity_bytes());
+    assert!(store.entries() <= 2);
+    // the account settles to exactly the committed entries — every
+    // admission either committed or rolled its reservation back
+    assert_eq!(store.stored_bytes(), store.entries() as u64 * 1024);
+    let c = store.counters();
+    assert_eq!(
+        c.saves + c.save_skips,
+        n_threads as u64 * rounds,
+        "every save accounted exactly once: {c:?}"
+    );
+}
+
+#[test]
+fn chunked_restore_matches_full_restore_bit_for_bit() {
+    // the pipelined warm start re-reads an entry as (layer, chunk)
+    // units; those must reassemble to exactly the saved bytes — with
+    // and without transient read faults in the way
+    fn eventually<T>(what: &str, mut f: impl FnMut() -> anyhow::Result<T>) -> T {
+        for _ in 0..50 {
+            if let Ok(v) = f() {
+                return v;
+            }
+        }
+        panic!("{what}: transient faults never cleared in 50 attempts");
+    }
+
+    let lo = layout();
+    for &(rate, seed) in &[(0.0, 0u64), (0.01, 7), (0.05, 11)] {
+        let mem: Arc<dyn Backend> = Arc::new(MemBackend::new());
+        let fb = Arc::new(FaultBackend::new(
+            mem,
+            FaultConfig {
+                rate,
+                corruption_rate: 0.0,
+                seed,
+                persistent: false,
+            },
+        ));
+        let store = PersistentStore::open_with_backend(
+            &cfg_mem(1 << 20),
+            DiskProfile::nvme(),
+            lo.clone(),
+            fb,
+        )
+        .unwrap();
+        let tokens = tokens_for(16, 80);
+        let rows = rows_for(&lo, 16, 81);
+        assert_eq!(store.save(&tokens, &rows).unwrap(), 16);
+        let m = store.lookup(&tokens).expect("saved prefix found");
+
+        let full = eventually("full restore", || store.restore(&m, 16));
+        let credited = store.counters().restored_tokens;
+        for layer in 0..lo.n_layers {
+            // 8-token chunks, assembled in order like the restore worker
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for c in 0..2 {
+                let ch = eventually("chunk restore", || store.restore_chunk(&m, layer, c * 8, 8));
+                assert_eq!((ch.layer, ch.start, ch.tokens), (layer, c * 8, 8));
+                if rate == 0.0 {
+                    assert!(ch.io_time > Duration::ZERO, "modeled read time surfaces");
+                }
+                k.extend_from_slice(&ch.k_rows);
+                v.extend_from_slice(&ch.v_rows);
+            }
+            assert_eq!(bits(&k), bits(&full[layer].0), "rate {rate} layer {layer} K vs full");
+            assert_eq!(bits(&v), bits(&full[layer].1), "rate {rate} layer {layer} V vs full");
+            assert_eq!(bits(&k), bits(&rows[layer].0), "rate {rate} layer {layer} K vs saved");
+            assert_eq!(bits(&v), bits(&rows[layer].1), "rate {rate} layer {layer} V vs saved");
+        }
+        // chunk reads never self-credit; the caller credits the
+        // committed region once
+        assert_eq!(store.counters().restored_tokens, credited);
+        store.credit_restored(16);
+        assert_eq!(store.counters().restored_tokens, credited + 16);
+        // transient faults must not have quarantined anything
+        assert_eq!(store.counters().quarantined, 0, "rate {rate}");
+        assert_eq!(store.entries(), 1);
+    }
 }
 
 #[test]

@@ -1,0 +1,302 @@
+//! Integration: pipelined warm-start restores through the engine —
+//! bit-identity against blocking and cold prefill (with and without
+//! fault injection), chunk-granular degrade on a torn record, and the
+//! router's wave-failure containment + padding-pollution fixes.
+//!
+//! Needs AOT artifacts (each test skips without them, like the other
+//! engine-level suites).
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use kvswap::config::{FaultConfig, KvSwapConfig, StoreConfig};
+use kvswap::coordinator::batcher::BatcherConfig;
+use kvswap::coordinator::router::Router;
+use kvswap::coordinator::{Engine, EngineConfig, Policy};
+use kvswap::disk::{Backend, DiskProfile, MemBackend};
+use kvswap::kvcache::DiskLayout;
+use kvswap::runtime::{default_artifacts_dir, Manifest, PjrtRuntime};
+use kvswap::store::PersistentStore;
+use kvswap::util::rng::Rng;
+use kvswap::workload::tracegen::Request;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Rc::new(PjrtRuntime::new(Manifest::load(dir).unwrap()).unwrap()))
+}
+
+fn store_cfg() -> StoreConfig {
+    StoreConfig {
+        enabled: true,
+        dir: None,
+        capacity_bytes: 64 << 20,
+        scrub_interval_s: 3600.0,
+        scrub_budget: 4,
+        pipelined_restore: true,
+    }
+}
+
+fn cfg(max_context: usize) -> EngineConfig {
+    let mut c = EngineConfig::builder()
+        .preset("nano")
+        .batch(1)
+        .policy(Policy::KvSwap)
+        .kv(KvSwapConfig::default())
+        .disk(DiskProfile::nvme())
+        .max_context(max_context)
+        .build()
+        .expect("valid test config");
+    c.store = store_cfg();
+    c
+}
+
+/// Prompt geometry: a few chunks, clamped to the prefill artifact.
+fn prompt_for(rt: &PjrtRuntime, seed: u64) -> (Vec<i32>, usize, usize) {
+    let info = &rt.manifest.presets["nano"];
+    let chunk = info.prefill_chunk;
+    let n_chunks = (info.prefill_ncap / chunk).clamp(2, 4);
+    let s_len = n_chunks * chunk;
+    let mut rng = Rng::new(seed);
+    let prompt = (0..s_len).map(|_| rng.below(info.spec.vocab) as i32).collect();
+    (prompt, s_len, chunk)
+}
+
+#[test]
+fn pipelined_restore_is_bit_identical_and_overlapped() {
+    let Some(rt) = runtime() else { return };
+    let (prompt, s_len, chunk) = prompt_for(&rt, 42);
+    let base = cfg(s_len);
+
+    let mut cold = Engine::new(rt.clone(), base.clone()).unwrap();
+    let first_cold = cold.prefill(&[prompt.clone()]).unwrap();
+    assert!(cold.prefill_io_overlap_ratio().is_none(), "cold run never restored");
+    let store = cold.store().expect("store open");
+
+    let mut blk_cfg = base.clone();
+    blk_cfg.store.pipelined_restore = false;
+    let mut blocking = Engine::with_store(rt.clone(), blk_cfg, Some(store.clone())).unwrap();
+    let first_blk = blocking.prefill(&[prompt.clone()]).unwrap();
+
+    let mut pipelined = Engine::with_store(rt.clone(), base, Some(store.clone())).unwrap();
+    let first_pipe = pipelined.prefill(&[prompt.clone()]).unwrap();
+
+    assert_eq!(first_cold, first_blk, "blocking restore diverged from cold");
+    assert_eq!(first_cold, first_pipe, "pipelined restore diverged from cold");
+    // both warm modes reuse everything but the final (recomputed) chunk
+    assert_eq!(blocking.reused_prefix_tokens() as usize, s_len - chunk);
+    assert_eq!(pipelined.reused_prefix_tokens() as usize, s_len - chunk);
+    // nothing hides a blocking restore; the worker hides at least some
+    // of the pipelined one
+    let blk = blocking.prefill_io_overlap_ratio().expect("blocking warm ran");
+    let pipe = pipelined.prefill_io_overlap_ratio().expect("pipelined warm ran");
+    assert!(blk < 0.05, "blocking restore claims overlap: {blk:.3}");
+    assert!(pipe > 0.0, "pipelined restore hid nothing: {pipe:.3}");
+}
+
+#[test]
+fn pipelined_restore_stays_bit_identical_under_faults() {
+    let Some(rt) = runtime() else { return };
+    for &(rate, seed) in &[(0.01f64, 7u64), (0.05, 11)] {
+        let (prompt, s_len, _) = prompt_for(&rt, 43 + seed);
+        let mut base = cfg(s_len);
+        base.fault = FaultConfig {
+            rate,
+            corruption_rate: 0.0,
+            seed,
+            persistent: false,
+        };
+
+        let mut cold = Engine::new(rt.clone(), base.clone()).unwrap();
+        let first_cold = cold.prefill(&[prompt.clone()]).unwrap();
+        let store = cold.store().expect("store open");
+
+        let mut blk_cfg = base.clone();
+        blk_cfg.store.pipelined_restore = false;
+        let mut blocking = Engine::with_store(rt.clone(), blk_cfg, Some(store.clone())).unwrap();
+        let first_blk = blocking.prefill(&[prompt.clone()]).unwrap();
+
+        let mut pipelined = Engine::with_store(rt.clone(), base, Some(store)).unwrap();
+        let first_pipe = pipelined.prefill(&[prompt.clone()]).unwrap();
+
+        // under transient faults a restore may tear and recompute more —
+        // the produced tokens must not change either way
+        assert_eq!(first_cold, first_blk, "rate {rate}: blocking diverged");
+        assert_eq!(first_cold, first_pipe, "rate {rate}: pipelined diverged");
+    }
+}
+
+#[test]
+fn torn_chunk_degrades_at_chunk_granularity() {
+    let Some(rt) = runtime() else { return };
+    let (prompt, s_len, chunk) = prompt_for(&rt, 44);
+    let base = cfg(s_len);
+
+    // build the store over an inspectable backend, replicating the
+    // engine's slot geometry (Engine::with_store checks the match)
+    let info = &rt.manifest.presets["nano"];
+    let layout = DiskLayout::new(
+        info.spec.kv_flat_dim(),
+        base.kv.group_size,
+        base.max_context + 1024,
+        info.spec.n_layers,
+        DiskProfile::nvme().page_bytes.min(4096),
+    );
+    let mem = Arc::new(MemBackend::new());
+    let store = Arc::new(
+        PersistentStore::open_with_backend(
+            &store_cfg(),
+            DiskProfile::nvme(),
+            layout.clone(),
+            mem.clone(),
+        )
+        .unwrap(),
+    );
+
+    let mut cold = Engine::with_store(rt.clone(), base.clone(), Some(store.clone())).unwrap();
+    let first_cold = cold.prefill(&[prompt.clone()]).unwrap();
+    assert_eq!(store.entries(), 1, "cold prefill persisted the prompt");
+
+    // rot one byte of the record backing warm chunk 1 of layer 0 (the
+    // first save of a fresh store lands in slot 0)
+    let gi = chunk / layout.group;
+    let off = layout.offset(0, 0, gi);
+    let mut b = [0u8; 1];
+    mem.read_at(off + 3, &mut b).unwrap();
+    mem.write_at(off + 3, &[b[0] ^ 0xFF]).unwrap();
+
+    let mut warm = Engine::with_store(rt.clone(), base, Some(store.clone())).unwrap();
+    let first_warm = warm.prefill(&[prompt.clone()]).unwrap();
+
+    // the tear at chunk 1 discards the warm region from there on but
+    // keeps chunk 0 — partial reuse, not a cold fallback
+    assert_eq!(first_cold, first_warm, "degraded restore diverged");
+    assert_eq!(
+        warm.reused_prefix_tokens() as usize,
+        chunk,
+        "expected exactly the pre-tear chunk reused"
+    );
+    let c = store.counters();
+    assert!(c.corruptions >= 1, "corruption detected and logged: {c:?}");
+    assert_eq!(c.restored_tokens as usize, chunk, "credit only what survived");
+    let sites = store.corruption_sites();
+    assert!(
+        sites.iter().any(|s| s.layer == 0 && s.group == gi),
+        "corruption site pins the rotten record: {sites:?}"
+    );
+}
+
+#[test]
+fn router_survives_a_failed_wave() {
+    let Some(_) = runtime() else { return };
+    let engine_cfg = EngineConfig::builder()
+        .preset("nano")
+        .batch(1)
+        .policy(Policy::KvSwap)
+        .kv(KvSwapConfig::default())
+        .disk(DiskProfile::nvme())
+        .max_context(1024)
+        .build()
+        .expect("valid router config");
+    // the batcher admits far more context than the engine can prefill,
+    // so the oversized request fails inside the wave, not at the door
+    let batcher_cfg = BatcherConfig {
+        supported: vec![1],
+        linger_s: 0.01,
+        max_context: 1 << 20,
+    };
+    let router = Router::spawn(default_artifacts_dir(), engine_cfg, batcher_cfg);
+
+    router.submit(Request {
+        id: 1,
+        context: 1 << 19, // over any compiled prefill capacity
+        decode: 2,
+        arrival_s: 0.0,
+        seed: 1,
+        tokens: None,
+    });
+    router.flush();
+    let c = router
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .expect("error completion for the failed wave");
+    assert_eq!(c.id, 1);
+    assert!(c.tokens.is_empty());
+    assert!(
+        c.error.as_deref().is_some_and(|e| e.contains("too long")),
+        "error surfaces the cause: {:?}",
+        c.error
+    );
+
+    // the session keeps serving after the failure
+    router.submit(Request {
+        id: 2,
+        context: 256,
+        decode: 3,
+        arrival_s: 0.0,
+        seed: 2,
+        tokens: None,
+    });
+    router.flush();
+    let c2 = router
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .expect("completion after the failed wave");
+    assert_eq!(c2.id, 2);
+    assert_eq!(c2.tokens.len(), 3);
+    assert!(c2.error.is_none());
+
+    let s = router.stats().expect("stats after failure");
+    assert_eq!(s.usize_or("waves", 0), 2);
+    assert_eq!(s.usize_or("wave_errors", 0), 1);
+    router.stop().unwrap();
+}
+
+#[test]
+fn ragged_wave_padding_never_reaches_the_store() {
+    let Some(_) = runtime() else { return };
+    let mut engine_cfg = EngineConfig::builder()
+        .preset("nano")
+        .batch(1)
+        .policy(Policy::KvSwap)
+        .kv(KvSwapConfig::default())
+        .disk(DiskProfile::nvme())
+        .max_context(1024)
+        .build()
+        .expect("valid router config");
+    engine_cfg.store = store_cfg();
+    // force one wave of batch 4 out of three ragged requests: the
+    // fourth row is all-zero padding and the short rows get zero tails
+    let batcher_cfg = BatcherConfig {
+        supported: vec![4],
+        linger_s: 0.01,
+        max_context: 1024,
+    };
+    let router = Router::spawn(default_artifacts_dir(), engine_cfg, batcher_cfg);
+    for (id, context) in [(1u64, 256usize), (2, 256), (3, 320)] {
+        router.submit(Request {
+            id,
+            context,
+            decode: 2,
+            arrival_s: 0.0,
+            seed: id,
+            tokens: None,
+        });
+    }
+    router.flush();
+    for _ in 0..3 {
+        let c = router
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("completion");
+        assert!(c.error.is_none());
+        assert_eq!(c.batch, 4);
+    }
+    let s = router.stats().expect("stats");
+    let store = s.get("store").expect("store counters present");
+    // one save per real request — unpadded prefixes only — and the
+    // padding row counted as an explicit skip
+    assert_eq!(store.usize_or("saves", 0), 3);
+    assert_eq!(store.usize_or("pad_skips", 0), 1);
+    assert_eq!(s.usize_or("wave_errors", 9), 0);
+    router.stop().unwrap();
+}
