@@ -28,6 +28,14 @@ if [ -f "$ARTIFACTS/manifest.json" ]; then
     --fault-rate 0.05 --fault-corrupt-rate 0.05 --fault-seed 7 --io-retries 5 \
     --fault-persistent --store-mem --store-capacity 64
 
+  # unified-scheduler smoke: the fig8 bench's Part 3 restores a warm
+  # prompt through the shared Warm lane and asserts cross_plan_merges > 0
+  # and device read ops <= the separate-pool baseline; a run with
+  # --separate-io must still work (store reads revert to direct)
+  cargo bench --bench fig8_overlap -- --steps 40 --io-steps 4
+  cargo run --release -q -- run --policy kvswap --context 512 --steps 8 \
+    --separate-io --store-mem --store-capacity 64
+
   # serve-mode fault smoke: a session with mid-stream faults and one
   # doomed (oversized) request must keep emitting completions — the
   # failed wave gets an "error" completion, the flanking requests real

@@ -233,6 +233,18 @@ pub struct PrefetchConfig {
     /// gap is cheaper than an extra op latency; 16 KiB default sits well
     /// under NVMe's 80 µs ≈ 144 KiB break-even).
     pub coalesce_gap: u64,
+    /// Max queued plans (across lanes, same device) merged into one
+    /// dispatch group when their extents are gap-close. `1` disables
+    /// cross-plan coalescing.
+    pub dispatch_window: usize,
+    /// Starvation bound for the `Background` lane: a queued scrub read
+    /// older than this is promoted past strict priority, milliseconds.
+    pub aging_ms: u64,
+    /// Route store restores (`Warm`) and scrub reads (`Background`)
+    /// through the shared scheduler. `false` keeps the legacy
+    /// separate-pools shape (each stream reads its device directly) —
+    /// the baseline the benches compare against.
+    pub unified_io: bool,
 }
 
 impl Default for PrefetchConfig {
@@ -241,6 +253,9 @@ impl Default for PrefetchConfig {
             workers: 2,
             queue_depth: 2,
             coalesce_gap: 16 * 1024,
+            dispatch_window: 4,
+            aging_ms: 50,
+            unified_io: true,
         }
     }
 }
@@ -259,6 +274,9 @@ impl PrefetchConfig {
             ("workers", self.workers.into()),
             ("queue_depth", self.queue_depth.into()),
             ("coalesce_gap", (self.coalesce_gap as usize).into()),
+            ("dispatch_window", self.dispatch_window.into()),
+            ("aging_ms", (self.aging_ms as usize).into()),
+            ("unified_io", self.unified_io.into()),
         ])
     }
 
@@ -268,6 +286,12 @@ impl PrefetchConfig {
             workers: j.usize_or("workers", d.workers),
             queue_depth: j.usize_or("queue_depth", d.queue_depth),
             coalesce_gap: j.usize_or("coalesce_gap", d.coalesce_gap as usize) as u64,
+            dispatch_window: j.usize_or("dispatch_window", d.dispatch_window),
+            aging_ms: j.usize_or("aging_ms", d.aging_ms as usize) as u64,
+            unified_io: j
+                .get("unified_io")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(d.unified_io),
         }
     }
 }
@@ -419,6 +443,11 @@ pub struct StoreConfig {
     /// reads overlap compute (`false` ⇒ restore fully before the first
     /// prefill chunk runs). Restores are bit-identical either way.
     pub pipelined_restore: bool,
+    /// Compact the data file during `maintain()` once the freed-slot
+    /// fraction (recycled slots ÷ allocated slots) exceeds this: live
+    /// records are rewritten contiguously and the file is truncated.
+    /// `>= 1.0` disables compaction.
+    pub compact_free_frac: f64,
 }
 
 impl Default for StoreConfig {
@@ -430,6 +459,7 @@ impl Default for StoreConfig {
             scrub_interval_s: 5.0,
             scrub_budget: 4,
             pipelined_restore: true,
+            compact_free_frac: 0.35,
         }
     }
 }
@@ -449,6 +479,7 @@ impl StoreConfig {
             ("scrub_interval_s", self.scrub_interval_s.into()),
             ("scrub_budget", self.scrub_budget.into()),
             ("pipelined_restore", self.pipelined_restore.into()),
+            ("compact_free_frac", self.compact_free_frac.into()),
         ])
     }
 
@@ -470,6 +501,7 @@ impl StoreConfig {
                 .get("pipelined_restore")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(d.pipelined_restore),
+            compact_free_frac: j.f64_or("compact_free_frac", d.compact_free_frac),
         }
     }
 }
@@ -564,9 +596,14 @@ mod tests {
             workers: 4,
             queue_depth: 3,
             coalesce_gap: 4096,
+            dispatch_window: 6,
+            aging_ms: 25,
+            unified_io: false,
         };
         let back = PrefetchConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
         assert_eq!(back, c);
+        assert!(d.dispatch_window >= 1, "window of 1 = no cross-plan merging");
+        assert!(d.unified_io, "shared scheduler defaults on");
     }
 
     #[test]
@@ -612,6 +649,7 @@ mod tests {
             scrub_interval_s: 0.5,
             scrub_budget: 2,
             pipelined_restore: false,
+            compact_free_frac: 0.5,
         };
         let back = StoreConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
         assert_eq!(back, c);

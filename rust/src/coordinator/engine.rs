@@ -27,7 +27,7 @@
 //! per layer, `stall = max(0, io_time - compute_since_issue)` — the
 //! overlap accounting of Appendix A.4.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -35,13 +35,13 @@ use std::time::{Duration, Instant};
 use super::policy::Policy;
 use crate::config::{FaultConfig, KvSwapConfig, ModelSpec, PrefetchConfig, RetryConfig, StoreConfig};
 use crate::disk::{
-    Backend, BreakerState, DiskProfile, FaultBackend, PlannedExtent, Prefetcher, PreloadPlan,
-    RetryPolicy, SimDisk, StorageBackend,
+    Backend, BreakerState, DiskProfile, FaultBackend, IoScheduler, LaneSummary, PlannedExtent,
+    Prefetcher, PreloadPlan, RetryPolicy, SimDisk, StorageBackend,
 };
 use crate::kvcache::{DiskLayout, KvManager, ManagerConfig, SeqState};
 use crate::metrics::{Breakdown, DecodeStats, Phase};
 use crate::predictor::{self, OverlapTracker};
-use crate::store::{PersistentStore, PrefixMatch};
+use crate::store::{ChunkTicket, PersistentStore, PrefixMatch};
 use crate::runtime::host_ref::{HostModel, KvLayer};
 use crate::runtime::tensor::{Tensor, TensorI32};
 use crate::runtime::{ModelRuntime, PjrtRuntime};
@@ -196,6 +196,10 @@ impl EngineConfigBuilder {
         anyhow::ensure!(
             c.prefetch.queue_depth >= 1,
             "prefetch.queue_depth must be >= 1"
+        );
+        anyhow::ensure!(
+            c.prefetch.dispatch_window >= 1,
+            "prefetch.dispatch_window must be >= 1"
         );
         anyhow::ensure!(
             c.time_scale >= 0.0 && c.time_scale.is_finite(),
@@ -359,6 +363,14 @@ struct RestorePipeline {
 /// of compute without buffering the whole warm region in memory.
 const RESTORE_QUEUE_DEPTH: usize = 4;
 
+/// How many `(layer, chunk)` units the restore worker keeps *submitted*
+/// on the `Warm` lane before redeeming the oldest. A window > 1 is what
+/// gives the unified scheduler adjacent record extents to coalesce
+/// across plans (layer-major layout makes consecutive chunks of a layer
+/// — and the last chunk of layer `l` with the first of `l+1` —
+/// contiguous on disk).
+const RESTORE_SUBMIT_AHEAD: usize = 4;
+
 /// Stream the warm region out of the store on a dedicated thread,
 /// layer-major (all of layer 0's chunks, then layer 1's, …) to match
 /// prefill's consumption order: the first computed chunk touches layers
@@ -367,6 +379,12 @@ const RESTORE_QUEUE_DEPTH: usize = 4;
 /// worker shares only the `PersistentStore` (its backend + book-keeping
 /// are thread-safe); everything runtime-bound stays on the engine
 /// thread, mirroring the prefetch pool's split.
+///
+/// When the store is attached to the unified I/O scheduler, each unit's
+/// record reads are submitted ahead on the `Warm` lane (a sliding window
+/// of [`RESTORE_SUBMIT_AHEAD`] units) and redeemed in order; unattached,
+/// `submit_chunk` returns `None` and the unit falls back to a direct
+/// [`PersistentStore::restore_chunk`] with identical semantics.
 fn spawn_restore_worker(
     store: Arc<PersistentStore>,
     matches: Vec<PrefixMatch>,
@@ -381,44 +399,67 @@ fn spawn_restore_worker(
             // a tear shrinks the usable region for *every* layer: chunks
             // at or past the tear are skipped, earlier ones keep flowing
             let mut limit = warm_chunks;
-            'layers: for layer in 0..n_layers {
-                for c in 0..warm_chunks {
+            // sliding submit-ahead window: (layer, chunk, issue time,
+            // one optional Warm-lane ticket per batch row)
+            type Inflight = (usize, usize, Instant, Vec<Option<ChunkTicket>>);
+            let mut inflight: VecDeque<Inflight> = VecDeque::new();
+            let total = n_layers * warm_chunks;
+            let mut next = 0usize; // unit index = layer * warm_chunks + c
+            loop {
+                while inflight.len() < RESTORE_SUBMIT_AHEAD && next < total {
+                    let (layer, c) = (next / warm_chunks, next % warm_chunks);
+                    next += 1;
                     if c >= limit {
-                        break;
+                        continue; // past a tear: never issued
                     }
                     let issued_at = Instant::now();
-                    let mut per_seq = Vec::with_capacity(matches.len());
-                    let mut io_time = Duration::ZERO;
-                    let mut torn = false;
-                    for m in &matches {
-                        match store.restore_chunk(m, layer, c * chunk, chunk) {
-                            Ok(r) => {
-                                io_time += r.io_time;
-                                per_seq.push((r.k_rows, r.v_rows));
-                            }
-                            Err(e) => {
-                                crate::log_debug!(
-                                    "pipelined restore tore at layer {layer} chunk {c}: {e}"
-                                );
-                                torn = true;
-                                break;
-                            }
+                    let tickets: Vec<Option<ChunkTicket>> = matches
+                        .iter()
+                        .map(|m| store.submit_chunk(m, layer, c * chunk, chunk))
+                        .collect();
+                    inflight.push_back((layer, c, issued_at, tickets));
+                }
+                let Some((layer, c, issued_at, tickets)) = inflight.pop_front() else {
+                    break; // everything issued and drained
+                };
+                if c >= limit {
+                    continue; // torn after issue: dropped tickets abandon
+                }
+                let mut per_seq = Vec::with_capacity(matches.len());
+                let mut io_time = Duration::ZERO;
+                let mut torn = false;
+                for (m, t) in matches.iter().zip(tickets) {
+                    let restored = match t {
+                        Some(t) => store.complete_chunk(t),
+                        None => store.restore_chunk(m, layer, c * chunk, chunk),
+                    };
+                    match restored {
+                        Ok(r) => {
+                            io_time += r.io_time;
+                            per_seq.push((r.k_rows, r.v_rows));
+                        }
+                        Err(e) => {
+                            crate::log_debug!(
+                                "pipelined restore tore at layer {layer} chunk {c}: {e}"
+                            );
+                            torn = true;
+                            break;
                         }
                     }
-                    if torn {
-                        limit = c;
-                        if tx.send(RestoreMsg::Torn { chunk: c }).is_err() {
-                            return; // engine gone
-                        }
-                        if limit == 0 {
-                            break 'layers;
-                        }
-                        continue;
+                }
+                if torn {
+                    limit = c;
+                    if tx.send(RestoreMsg::Torn { chunk: c }).is_err() {
+                        return; // engine gone
                     }
-                    let unit = RestoreMsg::Unit { layer, chunk: c, per_seq, io_time, issued_at };
-                    if tx.send(unit).is_err() {
-                        return;
+                    if limit == 0 {
+                        break;
                     }
+                    continue;
+                }
+                let unit = RestoreMsg::Unit { layer, chunk: c, per_seq, io_time, issued_at };
+                if tx.send(unit).is_err() {
+                    return;
                 }
             }
             let _ = tx.send(RestoreMsg::Done);
@@ -585,11 +626,30 @@ impl Engine {
         let disk = Arc::new(SimDisk::new(cfg.disk.clone(), backend, pacing));
         // the prefetch workers share only the SimDisk (Backend + stats);
         // everything runtime-bound stays on this thread
-        let prefetcher = Prefetcher::spawn_with(
-            disk.clone(),
-            &cfg.prefetch,
-            RetryPolicy::new(cfg.retry.clone()),
-        );
+        let prefetcher = if cfg.prefetch.unified_io {
+            // one scheduler serves every read stream through priority
+            // lanes: decode preloads (Critical), store warm restores
+            // (Warm), scrub verification (Background)
+            let sched = Arc::new(IoScheduler::new(
+                &cfg.prefetch,
+                RetryPolicy::new(cfg.retry.clone()),
+            ));
+            if let Some(s) = &store {
+                s.attach_scheduler(&sched);
+            }
+            Prefetcher::with_scheduler(sched, disk.clone())
+        } else {
+            // separate-pools mode: a shared store attached by an earlier
+            // unified engine must stop routing through that scheduler
+            if let Some(s) = &store {
+                s.detach_scheduler();
+            }
+            Prefetcher::spawn_with(
+                disk.clone(),
+                &cfg.prefetch,
+                RetryPolicy::new(cfg.retry.clone()),
+            )
+        };
 
         let sel_entries = cfg.kv.selected_entries();
         let sel_region = (sel_entries / g_layout) * g_layout;
@@ -693,6 +753,15 @@ impl Engine {
 
     pub fn ncap(&self) -> usize {
         self.ncap
+    }
+
+    /// Cumulative per-lane scheduler counters since engine construction.
+    /// Unlike [`PrefetchSummary`](crate::disk::PrefetchSummary)'s
+    /// window-scoped lane fields (reset with the decode counters), these
+    /// never reset — benches assert on whole-run totals such as
+    /// `cross_plan_merges`.
+    pub fn lane_summary(&self) -> LaneSummary {
+        self.prefetcher.scheduler().lane_summary()
     }
 
     /// Mean selection-overlap ratio across (seq, layer) streams (§3.4.2).

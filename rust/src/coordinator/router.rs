@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{Engine, EngineConfig};
+use crate::disk::{Lane, LaneSummary};
 use crate::metrics::DecodeStats;
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::store::PersistentStore;
@@ -72,6 +73,7 @@ fn stats_json(
             ("breaker", "closed".into()),
             ("io_overlap_ratio", 0.0f64.into()),
             ("prefill_io_overlap_ratio", Json::Null),
+            ("lanes", Json::Null),
         ]),
     };
     j.set("waves", (session.waves as usize).into());
@@ -91,6 +93,25 @@ fn stats_json(
         }
     }
     j
+}
+
+/// Per-lane scheduler counters for the serve `stats` line (cumulative
+/// over the wave's engine lifetime).
+fn lanes_json(l: &LaneSummary) -> Json {
+    let lane = |ln: Lane| {
+        Json::from_pairs(vec![
+            ("dispatched", (l.lane_dispatched[ln.idx()] as usize).into()),
+            ("wait_us", (l.lane_wait_us[ln.idx()] as usize).into()),
+            ("mean_wait_us", l.mean_wait_us(ln).into()),
+        ])
+    };
+    Json::from_pairs(vec![
+        ("critical", lane(Lane::Critical)),
+        ("warm", lane(Lane::Warm)),
+        ("background", lane(Lane::Background)),
+        ("cross_plan_merges", (l.cross_plan_merges as usize).into()),
+        ("aged_promotions", (l.aged_promotions as usize).into()),
+    ])
 }
 
 pub struct Router {
@@ -282,6 +303,7 @@ impl Router {
                                 None => Json::Null,
                             },
                         ),
+                        ("lanes", lanes_json(&engine.lane_summary())),
                     ]));
 
                     for (row, req) in wave.requests.iter().enumerate() {

@@ -67,6 +67,14 @@ pub trait Backend: Send + Sync {
         }
         Ok(())
     }
+
+    /// Shrink the backing store to `len` bytes, discarding everything
+    /// past it (store compaction reclaims freed tail space this way).
+    /// Backends that cannot shrink simply keep the old size — callers
+    /// must not rely on reads past `len` failing afterwards.
+    fn truncate(&self, _len: u64) -> DiskResult<()> {
+        Ok(())
+    }
 }
 
 /// Where a [`crate::disk::SimDisk`]'s bytes live — resolved to a concrete
@@ -168,6 +176,16 @@ impl Backend for MemBackend {
         relock(&self.data).len() as u64
     }
 
+    fn truncate(&self, len: u64) -> DiskResult<()> {
+        let mut data = relock(&self.data);
+        let new_len = usize::try_from(len).unwrap_or(usize::MAX);
+        if new_len < data.len() {
+            data.truncate(new_len);
+            data.shrink_to_fit();
+        }
+        Ok(())
+    }
+
     /// One lock acquisition for the whole batch.
     fn read_batch(&self, reqs: &mut [ReadReq]) -> DiskResult<()> {
         let data = relock(&self.data);
@@ -243,6 +261,17 @@ impl Backend for FileBackend {
 
     fn len(&self) -> u64 {
         *relock(&self.len)
+    }
+
+    fn truncate(&self, len: u64) -> DiskResult<()> {
+        let mut cur = relock(&self.len);
+        if len < *cur {
+            self.file
+                .set_len(len)
+                .map_err(|e| DiskError::io(e, len, 0))?;
+            *cur = len;
+        }
+        Ok(())
     }
 
     /// Issue in ascending offset order: positional syscalls hit the page
@@ -350,6 +379,36 @@ mod tests {
         let mut buf = [0u8; 8];
         assert!(matches!(
             b.read_at(0, &mut buf),
+            Err(DiskError::OutOfBounds { .. })
+        ));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncate_shrinks_and_never_grows() {
+        let b = MemBackend::new();
+        b.write_at(0, &(0..32u8).collect::<Vec<_>>()).unwrap();
+        b.truncate(64).unwrap(); // grow request: no-op
+        assert_eq!(b.len(), 32);
+        b.truncate(8).unwrap();
+        assert_eq!(b.len(), 8);
+        let mut buf = [0u8; 8];
+        b.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(matches!(
+            b.read_at(8, &mut buf),
+            Err(DiskError::OutOfBounds { .. })
+        ));
+
+        let dir = std::env::temp_dir().join(format!("kvswap-test-tr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.bin");
+        let f = FileBackend::create(&path).unwrap();
+        f.write_at(0, &(0..32u8).collect::<Vec<_>>()).unwrap();
+        f.truncate(8).unwrap();
+        assert_eq!(f.len(), 8);
+        assert!(matches!(
+            f.read_at(4, &mut buf),
             Err(DiskError::OutOfBounds { .. })
         ));
         std::fs::remove_file(path).ok();

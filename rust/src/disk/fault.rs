@@ -254,6 +254,11 @@ impl Backend for FaultBackend {
         self.inner.len()
     }
 
+    fn truncate(&self, len: u64) -> DiskResult<()> {
+        // trusted like writes: compaction must actually reclaim space
+        self.inner.truncate(len)
+    }
+
     // default read_batch would coalesce the fault draws; go per-extent
     fn read_batch(&self, reqs: &mut [super::backend::ReadReq]) -> DiskResult<()> {
         for req in reqs.iter_mut() {

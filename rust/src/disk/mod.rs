@@ -1,13 +1,35 @@
 //! Disk substrate: device timing profiles (NVMe/eMMC/UFS/SD) with
 //! page-granule read amplification, byte backends (memory / real file),
-//! the `SimDisk` simulated device, I/O statistics, and the asynchronous
-//! prefetch pipeline.
+//! the `SimDisk` simulated device, I/O statistics, and the unified
+//! priority I/O scheduler that serves every read stream in the system.
 //!
 //! Paper mapping: §2.3 (Fig. 2 bandwidth-vs-block-size behaviour) is
 //! produced by `DiskProfile`; every offloading policy's I/O goes through
 //! `SimDisk` so the benches can attribute logical/physical bytes and busy
 //! time uniformly; §3.3's read orchestration lives in [`coalesce`] and
-//! the overlap of preloads with compute in [`prefetch`].
+//! [`sched`], and the overlap of preloads with compute in [`prefetch`].
+//!
+//! ## Pipeline shape
+//!
+//! All three read streams submit to one [`IoScheduler`] through priority
+//! lanes and share its worker pool, buffer pool, retry budget, and
+//! circuit breaker:
+//!
+//! ```text
+//!  decode prefetch ──Critical──▶ ┌─────────────────────┐
+//!  (Prefetcher)                  │     IoScheduler      │   coalesced
+//!  store restores ──Warm──────▶ │  strict priority +   │──batched──▶ SimDisk
+//!  (engine worker)              │  Background aging +  │   reads     (per device)
+//!  scrub reads ────Background─▶ │ cross-plan merging   │
+//!  (store maintainer)           └─────────────────────┘
+//! ```
+//!
+//! Dispatch is strict-priority (`Critical` > `Warm` > `Background`) with
+//! an aging bound that promotes a starved `Background` request, and each
+//! dispatch opens a window in which gap-close extents from *other*
+//! queued plans — same device only — merge into one sequential read
+//! (`cross_plan_merges`). Per-lane service counters surface through
+//! [`PrefetchSummary`] and the serve API's `stats` line.
 //!
 //! Public API shape:
 //!
@@ -16,7 +38,9 @@
 //!   happens only at the engine boundary;
 //! * multi-extent access goes through [`Backend::read_batch`] (with
 //!   per-backend submission strategies), fed by the coalescer so the
-//!   "merge small reads into big ones" logic exists in exactly one place;
+//!   "merge small reads into big ones" logic exists in exactly one place
+//!   ([`sched::read_group`] — [`prefetch::read_coalesced`] is the same
+//!   path applied to a single-plan group);
 //! * [`StorageBackend`] selects where bytes live (RAM, a real file, or a
 //!   caller-supplied backend) without the engine knowing the difference.
 //!
@@ -27,29 +51,33 @@
 //! persistently (a bad extent), or — worst — succeed with wrong bytes.
 //! [`fault`] can inject every one of these deterministically for tests
 //! and benches. Recovery is layered, each rung strictly cheaper than the
-//! one below it:
+//! one below it, and applies identically to every lane:
 //!
 //! 1. **Detect** — every `SimDisk` write stamps an FNV-1a checksum
 //!    ([`integrity`]); staging re-verifies exact-extent reads, turning
 //!    silent corruption into a typed, retryable [`DiskError::Corrupt`].
-//! 2. **Retry** — the coalesced read path re-issues failed runs with
-//!    bounded exponential backoff + jitter under a per-plan budget
-//!    ([`retry`]), guided by [`DiskError::is_retryable`].
-//! 3. **Contain** — prefetch worker panics are caught and surfaced as
-//!    `DiskError::WorkerPanic`; dead workers are respawned; locks
-//!    recover from poisoning instead of cascading panics.
-//! 4. **Degrade** — past `breaker_threshold` consecutive threaded plan
-//!    failures a circuit breaker routes plans through the synchronous
-//!    `workers: 0` path (half-open probes recover once the device
-//!    heals); a plan that still fails makes the *engine* fall back to
-//!    attention over the resident critical cache for that layer and
-//!    counts a degraded step in the metrics instead of aborting. The
-//!    persistent store's warm-start restores degrade the same way but
-//!    at *chunk* granularity: a torn record during a pipelined restore
-//!    (`store::PersistentStore::restore_chunk`) discards only the warm
-//!    region from that prefill chunk onward — everything restored
-//!    before the tear stays reused, and recompute (always bit-identical
-//!    to the restore) covers the rest.
+//! 2. **Retry** — the scheduler's group read re-issues failed runs with
+//!    bounded exponential backoff + jitter ([`retry`]), guided by
+//!    [`DiskError::is_retryable`]. Budgets stay per-plan: each member of
+//!    a merged dispatch group draws its own, so riders cannot starve the
+//!    plan they merged into.
+//! 3. **Contain** — scheduler worker panics are caught and surfaced as
+//!    `DiskError::WorkerPanic` to every plan in the dispatch group; dead
+//!    workers are respawned; locks recover from poisoning instead of
+//!    cascading panics.
+//! 4. **Degrade** — past `breaker_threshold` consecutive threaded
+//!    failures (on any lane) a circuit breaker degrades the *whole
+//!    scheduler* to synchronous routing: `submit` hands back an inline
+//!    ticket and the read runs on the caller's thread at `wait` time
+//!    (half-open probes recover once the device heals). A plan that
+//!    still fails makes the *engine* fall back to attention over the
+//!    resident critical cache for that layer and counts a degraded step
+//!    in the metrics instead of aborting. The persistent store's
+//!    warm-start restores degrade the same way but at *chunk*
+//!    granularity: a torn record during a pipelined restore discards
+//!    only the warm region from that prefill chunk onward — everything
+//!    restored before the tear stays reused, and recompute (always
+//!    bit-identical to the restore) covers the rest.
 //!
 //! Only non-retryable errors (`OutOfBounds` logic bugs, `QueueClosed`
 //! shutdown) propagate out of the ladder.
@@ -62,6 +90,7 @@ pub mod integrity;
 pub mod prefetch;
 pub mod profile;
 pub mod retry;
+pub mod sched;
 pub mod sim;
 pub mod stats;
 
@@ -71,10 +100,13 @@ pub use error::{DiskError, DiskResult};
 pub use fault::{Fault, FaultBackend, FaultSnapshot};
 pub use integrity::{fnv1a64, IntegrityMap};
 pub use prefetch::{
-    BreakerState, BufferPool, PlannedExtent, Prefetcher, PreloadPlan, PrefetchSummary, StagedLoad,
+    BufferPool, PlannedExtent, Prefetcher, PreloadPlan, PrefetchSummary, StagedLoad,
 };
 pub use profile::DiskProfile;
 pub use retry::{RetryBudget, RetryPolicy};
+pub use sched::{
+    BreakerState, IoCompletion, IoRequest, IoScheduler, Lane, LaneSummary, Ticket, N_LANES,
+};
 pub use sim::SimDisk;
 pub use stats::{DiskSnapshot, DiskStats};
 

@@ -1,69 +1,68 @@
-//! Asynchronous prefetch pipeline — the paper's overlap of
-//! prediction-driven preloads with compute, on *real* storage.
+//! Decode prefetch pipeline — the paper's overlap of prediction-driven
+//! preloads with compute, on *real* storage.
 //!
-//! A small worker pool consumes per-layer [`PreloadPlan`]s, coalesces the
-//! planned group extents into large sequential reads ([`coalesce`]),
-//! executes them through [`SimDisk::read_batch`], and stages the bytes
-//! into recycled buffers. Completed [`StagedLoad`]s flow back to the
-//! engine over a bounded channel; a ticket-numbered reorder buffer
-//! restores submission order, so the engine always receives layer *l*'s
-//! staging before layer *l+1*'s regardless of worker scheduling.
+//! [`Prefetcher`] is a thin, lane-tagged client of the unified
+//! [`IoScheduler`](super::sched::IoScheduler): every per-layer
+//! [`PreloadPlan`] is flattened into one `Critical`-lane request, and
+//! `recv` redeems tickets in submission order, so the engine always
+//! receives layer *l*'s staging before layer *l+1*'s regardless of
+//! worker scheduling. The scheduler owns the worker pool, the staging
+//! [`BufferPool`], the retry budget, and the circuit breaker; this
+//! module owns only plan bookkeeping (shapes, tags, ordering) and the
+//! per-client counters reported in `DecodeStats`.
 //!
-//! Backpressure is end-to-end: both the job queue and the completion
-//! queue are bounded at the configured queue depth, so a stalled engine
-//! stops the workers and a slow disk stalls `submit` — staged bytes never
-//! pile up beyond ~2×queue-depth buffers (the double-buffering bound).
+//! Backpressure is end-to-end: the `Critical` lane admits at most
+//! `queue_depth` queued plans, so a stalled engine stops the workers and
+//! a slow disk stalls `submit` — staged bytes never pile up beyond
+//! roughly queue-depth + worker buffers.
 //!
 //! `PrefetchConfig { workers: 0 }` degrades to a *synchronous* pipeline:
-//! `submit` only queues the plan and `recv` executes it inline. That mode
-//! is the baseline the benches compare against, and the bit-identical
-//! reference for the integration tests — both modes run byte-for-byte the
-//! same reads, only the threading differs.
+//! `submit` only issues an inline ticket and `recv` executes it on the
+//! caller's thread. That mode is the baseline the benches compare
+//! against, and the bit-identical reference for the integration tests —
+//! both modes run byte-for-byte the same reads, only the threading
+//! differs.
 //!
 //! ## Failure handling
 //!
-//! The pipeline assumes storage misbehaves (see [`super#failure-model--degradation-ladder`]):
+//! The ladder (see [`super#failure-model--degradation-ladder`]) lives in
+//! the scheduler; what this client guarantees on top:
 //!
-//! * staging reads retry failed runs under a per-plan [`RetryPolicy`]
-//!   budget and verify extent checksums before scattering bytes out;
-//! * a worker panic is caught, surfaced as `DiskError::WorkerPanic` for
-//!   *that plan only*, and the worker thread is recycled — `submit`
-//!   respawns finished workers;
-//! * a [`CircuitBreaker`] watches threaded plan outcomes: past
-//!   `breaker_threshold` consecutive failures it routes new plans through
-//!   the synchronous inline path (trading overlap for isolation from a
-//!   sick worker pool), and after `breaker_probe_after` clean inline
-//!   plans it sends a half-open probe back through the pool;
+//! * a plan whose staging ultimately failed yields its typed error from
+//!   `recv` — the ticket is consumed either way, so later plans still
+//!   deliver;
+//! * a `recv` timeout abandons only that ticket (the late completion is
+//!   dropped with its reply channel);
 //! * `shutdown` bounds its drain/join by a grace period and leaves the
 //!   pipeline returning `QueueClosed` instead of hanging on a wedged
-//!   worker; a `recv` timeout abandons only that ticket.
+//!   worker.
 //!
-//! The workers touch only [`Backend`](super::Backend) + staging memory;
-//! nothing device- or runtime-bound (`Rc<PjrtRuntime>` etc.) crosses a
-//! thread boundary.
+//! The scheduler's workers touch only [`Backend`](super::Backend) +
+//! staging memory; nothing device- or runtime-bound (`Rc<PjrtRuntime>`
+//! etc.) crosses a thread boundary.
 //!
-//! This pool overlaps *decode* I/O with compute. Prefill has a second,
-//! independent overlapped stream: the engine's store-restore worker
-//! (`coordinator::engine`) streams persistent-store chunks under prefill
-//! compute with the same thread-boundary rule and the same residual
-//! `Phase::IoWait` accounting convention — only the stall compute failed
-//! to hide is charged.
+//! This lane overlaps *decode* I/O with compute. Prefill's store-restore
+//! stream rides the same scheduler on the `Warm` lane (see
+//! `coordinator::engine`) with the same residual `Phase::IoWait`
+//! accounting convention — only the stall compute failed to hide is
+//! charged.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::backend::ReadReq;
-use super::coalesce::{coalesce, Run};
 use super::error::{DiskError, DiskResult};
 use super::relock;
 use super::retry::RetryPolicy;
+use super::sched::{self, BreakerState, IoRequest, IoScheduler, Lane, LaneSummary, Ticket, N_LANES};
 use super::sim::SimDisk;
 use crate::config::PrefetchConfig;
+
+/// Retained staging buffers above this capacity are dropped instead of
+/// pooled: one giant coalesced run must not pin memory for the rest of
+/// the session.
+pub const BUF_HIGH_WATER: usize = 4 << 20;
 
 /// One planned group read, tagged so the engine can route the staged
 /// bytes to the right cache slot (`tag` is policy-defined: group id,
@@ -89,26 +88,34 @@ pub struct StagedLoad {
     pub layer: usize,
     /// `(sequence index, [(tag, bytes)])` in plan order.
     pub per_seq: Vec<(usize, Vec<(u32, Vec<u8>)>)>,
-    /// Modeled device time for the whole plan (virtual-clock accounting).
+    /// Modeled device time for this plan's share of its dispatch group
+    /// (virtual-clock accounting).
     pub io_time: Duration,
     /// When the plan was submitted — residual wait = how much of
     /// `io_time` was *not* hidden behind compute since this instant.
     pub issued_at: Instant,
 }
 
-/// Recycled staging buffers, bounded so double-buffering stays bounded.
-/// Locks recover from poisoning: a panicking worker must not take the
-/// pool (and with it the engine thread) down with it.
+/// Recycled staging buffers, bounded in count *and* in retained
+/// capacity. Locks recover from poisoning: a panicking worker must not
+/// take the pool (and with it the engine thread) down with it.
 pub struct BufferPool {
     bufs: Mutex<Vec<Vec<u8>>>,
     max: usize,
+    high_water: usize,
 }
 
 impl BufferPool {
     pub fn new(max: usize) -> BufferPool {
+        BufferPool::with_high_water(max, BUF_HIGH_WATER)
+    }
+
+    /// Pool with an explicit retained-capacity bound per buffer.
+    pub fn with_high_water(max: usize, high_water: usize) -> BufferPool {
         BufferPool {
             bufs: Mutex::new(Vec::new()),
             max,
+            high_water,
         }
     }
 
@@ -117,6 +124,9 @@ impl BufferPool {
     }
 
     pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() > self.high_water {
+            return; // oversized one-off: let the allocator reclaim it
+        }
         buf.clear();
         let mut bufs = relock(&self.bufs);
         if bufs.len() < self.max {
@@ -125,8 +135,11 @@ impl BufferPool {
     }
 }
 
-/// Shared pipeline counters (lives in [`read_coalesced`]'s signature, so
-/// it is public; construct with `Default` when calling that directly).
+/// Per-client staging counters (lives in [`read_coalesced`]'s signature,
+/// so it is public; construct with `Default` when calling that
+/// directly). Pool-level events (panics, respawns, breaker trips, lane
+/// stats) are counted by the scheduler and merged into
+/// [`PrefetchSummary`] by [`Prefetcher::summary`].
 #[derive(Default)]
 pub struct PrefetchCounters {
     plans_submitted: AtomicU64,
@@ -137,9 +150,6 @@ pub struct PrefetchCounters {
     bytes_staged: AtomicU64,
     io_retries: AtomicU64,
     corrupt_detected: AtomicU64,
-    worker_panics: AtomicU64,
-    workers_restarted: AtomicU64,
-    breaker_trips: AtomicU64,
 }
 
 impl PrefetchCounters {
@@ -152,9 +162,7 @@ impl PrefetchCounters {
             bytes_staged: self.bytes_staged.load(Ordering::Relaxed),
             io_retries: self.io_retries.load(Ordering::Relaxed),
             corrupt_detected: self.corrupt_detected.load(Ordering::Relaxed),
-            worker_panics: self.worker_panics.load(Ordering::Relaxed),
-            workers_restarted: self.workers_restarted.load(Ordering::Relaxed),
-            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            ..PrefetchSummary::default()
         }
     }
 
@@ -167,13 +175,32 @@ impl PrefetchCounters {
         self.bytes_staged.store(0, Ordering::Relaxed);
         self.io_retries.store(0, Ordering::Relaxed);
         self.corrupt_detected.store(0, Ordering::Relaxed);
-        self.worker_panics.store(0, Ordering::Relaxed);
-        self.workers_restarted.store(0, Ordering::Relaxed);
-        self.breaker_trips.store(0, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_extents(&self, n: u64) {
+        self.extents_requested.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_runs(&self, n: u64) {
+        self.runs_issued.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_bytes(&self, n: u64) {
+        self.bytes_staged.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_retry(&self) {
+        self.io_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_corrupt(&self) {
+        self.corrupt_detected.fetch_add(1, Ordering::Relaxed);
     }
 }
 
-/// What the pipeline did over a decode run (reported in `DecodeStats`).
+/// What the pipeline did over a decode run (reported in `DecodeStats`):
+/// this client's staging counters plus the scheduler's service counters
+/// over the same window.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefetchSummary {
     pub plans: u64,
@@ -191,8 +218,16 @@ pub struct PrefetchSummary {
     pub worker_panics: u64,
     /// Worker threads respawned after dying.
     pub workers_restarted: u64,
-    /// Times the circuit breaker tripped the pipeline into sync routing.
+    /// Times the circuit breaker tripped the scheduler into sync routing.
     pub breaker_trips: u64,
+    /// Scheduler dispatches per lane (Critical, Warm, Background).
+    pub lane_dispatched: [u64; N_LANES],
+    /// Scheduler queue wait per lane, microseconds.
+    pub lane_wait_us: [u64; N_LANES],
+    /// Queued plans merged into another plan's dispatch group.
+    pub cross_plan_merges: u64,
+    /// Background requests promoted past strict priority by aging.
+    pub aged_promotions: u64,
 }
 
 impl PrefetchSummary {
@@ -205,144 +240,28 @@ impl PrefetchSummary {
     }
 }
 
-/// Circuit-breaker state over the threaded pipeline (see module docs).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum BreakerState {
-    /// Healthy: plans route through the worker pool.
-    Closed,
-    /// Tripped: plans route through the synchronous inline path.
-    Open,
-    /// One probe plan is in flight through the pool; everything else
-    /// stays inline until its verdict.
-    HalfOpen,
-}
-
-impl BreakerState {
-    /// Stable lower-case label for logs and the serve `stats` line.
-    pub fn name(self) -> &'static str {
-        match self {
-            BreakerState::Closed => "closed",
-            BreakerState::Open => "open",
-            BreakerState::HalfOpen => "half-open",
-        }
-    }
-}
-
-/// Consecutive-failure breaker with half-open probing. Not a separate
-/// thread — driven entirely by `submit` (routing) and `recv` (outcomes),
-/// so it adds no synchronization to the hot path.
-#[derive(Debug)]
-struct CircuitBreaker {
-    threshold: u32,
-    probe_after: u32,
-    state: BreakerState,
-    consecutive_failures: u32,
-    sync_successes: u32,
-    probe_ticket: Option<u64>,
-}
-
-impl CircuitBreaker {
-    fn new(threshold: u32, probe_after: u32) -> CircuitBreaker {
-        CircuitBreaker {
-            threshold: threshold.max(1),
-            probe_after: probe_after.max(1),
-            state: BreakerState::Closed,
-            consecutive_failures: 0,
-            sync_successes: 0,
-            probe_ticket: None,
-        }
-    }
-
-    fn state(&self) -> BreakerState {
-        self.state
-    }
-
-    /// Routing decision for a new ticket: `true` = worker pool.
-    fn route_threaded(&mut self, ticket: u64) -> bool {
-        match self.state {
-            BreakerState::Closed => true,
-            BreakerState::Open => {
-                if self.sync_successes >= self.probe_after {
-                    self.state = BreakerState::HalfOpen;
-                    self.probe_ticket = Some(ticket);
-                    true
-                } else {
-                    false
-                }
-            }
-            BreakerState::HalfOpen => false,
-        }
-    }
-
-    fn on_result(&mut self, ticket: u64, threaded: bool, ok: bool, counters: &PrefetchCounters) {
-        if ok {
-            match self.state {
-                BreakerState::HalfOpen if threaded && self.probe_ticket == Some(ticket) => {
-                    // probe survived: the pool is healthy again
-                    self.state = BreakerState::Closed;
-                    self.consecutive_failures = 0;
-                    self.sync_successes = 0;
-                    self.probe_ticket = None;
-                }
-                BreakerState::Closed if threaded => self.consecutive_failures = 0,
-                BreakerState::Open if !threaded => self.sync_successes += 1,
-                _ => {}
-            }
-        } else {
-            match self.state {
-                BreakerState::Closed => {
-                    if threaded {
-                        self.consecutive_failures += 1;
-                        if self.consecutive_failures >= self.threshold {
-                            self.state = BreakerState::Open;
-                            self.sync_successes = 0;
-                            counters.breaker_trips.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                }
-                BreakerState::HalfOpen => {
-                    // probe (or a straggler) failed: stay away from the pool
-                    self.state = BreakerState::Open;
-                    self.sync_successes = 0;
-                    self.probe_ticket = None;
-                }
-                BreakerState::Open => self.sync_successes = 0,
-            }
-        }
-    }
-}
-
-type Job = (u64, PreloadPlan, Instant);
-type Completion = (u64, DiskResult<StagedLoad>);
-
-/// Everything a staging call needs — shared by the engine thread (sync
-/// path) and every worker, and cheap to clone into respawned workers.
-#[derive(Clone)]
-struct StageCtx {
-    disk: Arc<SimDisk>,
-    pool: Arc<BufferPool>,
-    counters: Arc<PrefetchCounters>,
-    gap: u64,
-    retry: Arc<RetryPolicy>,
+struct PendingPlan {
+    layer: usize,
+    /// `(sequence index, tags)` — the shape the flat chunk list scatters
+    /// back into.
+    shape: Vec<(usize, Vec<u32>)>,
+    issued_at: Instant,
+    ticket: Ticket,
 }
 
 pub struct Prefetcher {
-    ctx: StageCtx,
-    /// `None` ⇒ synchronous mode (reads run inline in `recv`).
-    tx: Option<SyncSender<Job>>,
-    done_rx: Option<Receiver<Completion>>,
-    /// Kept so `ensure_workers` can hand a sender to respawned workers;
-    /// dropped at shutdown so the completion drain can disconnect.
-    done_tx: Option<SyncSender<Completion>>,
-    job_rx: Option<Arc<Mutex<Receiver<Job>>>>,
-    workers: Vec<JoinHandle<()>>,
-    breaker: CircuitBreaker,
-    /// ticket → routed-through-pool? (decided at submit, consumed at recv)
-    routes: BTreeMap<u64, bool>,
-    next_ticket: u64,
-    next_deliver: u64,
-    reordered: BTreeMap<u64, DiskResult<StagedLoad>>,
-    sync_queue: VecDeque<Job>,
+    sched: Arc<IoScheduler>,
+    /// Built our own scheduler (tests / standalone use): shut it down on
+    /// drop. A scheduler shared with the engine outlives this client.
+    owns_sched: bool,
+    disk: Arc<SimDisk>,
+    counters: Arc<PrefetchCounters>,
+    /// In-flight plans, delivered FIFO by `recv`.
+    pending: VecDeque<PendingPlan>,
+    /// Scheduler counter baseline captured at the last `reset_counters`,
+    /// so `summary()` reports service counters over the same window as
+    /// the client counters.
+    sched_base: Mutex<LaneSummary>,
     timeout: Duration,
     grace: Duration,
     closed: bool,
@@ -354,58 +273,45 @@ impl Prefetcher {
     }
 
     /// Spawn with an explicit retry/breaker policy (the engine builds the
-    /// policy from its validated `RetryConfig`).
+    /// policy from its validated `RetryConfig`). Creates a private
+    /// scheduler; use [`Prefetcher::with_scheduler`] to join a shared
+    /// one.
     pub fn spawn_with(disk: Arc<SimDisk>, cfg: &PrefetchConfig, retry: RetryPolicy) -> Prefetcher {
-        let rc = retry.config();
-        let breaker = CircuitBreaker::new(rc.breaker_threshold, rc.breaker_probe_after);
-        let ctx = StageCtx {
-            disk,
-            pool: Arc::new(BufferPool::new(2 * cfg.queue_depth.max(1))),
-            counters: Arc::new(PrefetchCounters::default()),
-            gap: cfg.coalesce_gap,
-            retry: Arc::new(retry),
-        };
-        let mut p = Prefetcher {
-            ctx,
-            tx: None,
-            done_rx: None,
-            done_tx: None,
-            job_rx: None,
-            workers: Vec::new(),
-            breaker,
-            routes: BTreeMap::new(),
-            next_ticket: 0,
-            next_deliver: 0,
-            reordered: BTreeMap::new(),
-            sync_queue: VecDeque::new(),
-            timeout: Duration::from_secs(60),
-            grace: Duration::from_secs(5),
-            closed: false,
-        };
-        if cfg.workers == 0 {
-            return p;
-        }
-        let (tx, job_rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
-        let (done_tx, done_rx) = sync_channel::<Completion>(cfg.queue_depth.max(1));
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        for w in 0..cfg.workers {
-            p.workers
-                .push(spawn_worker(w, job_rx.clone(), done_tx.clone(), p.ctx.clone()));
-        }
-        p.tx = Some(tx);
-        p.done_rx = Some(done_rx);
-        p.done_tx = Some(done_tx);
-        p.job_rx = Some(job_rx);
+        let sched = Arc::new(IoScheduler::new(cfg, retry));
+        let mut p = Prefetcher::with_scheduler(sched, disk);
+        p.owns_sched = true;
         p
     }
 
+    /// Attach to a shared [`IoScheduler`] as its `Critical`-lane client.
+    /// The scheduler's lifetime is the caller's problem; this client
+    /// only drains its own in-flight plans on shutdown.
+    pub fn with_scheduler(sched: Arc<IoScheduler>, disk: Arc<SimDisk>) -> Prefetcher {
+        Prefetcher {
+            sched,
+            owns_sched: false,
+            disk,
+            counters: Arc::new(PrefetchCounters::default()),
+            pending: VecDeque::new(),
+            sched_base: Mutex::new(LaneSummary::default()),
+            timeout: Duration::from_secs(60),
+            grace: Duration::from_secs(5),
+            closed: false,
+        }
+    }
+
     pub fn is_synchronous(&self) -> bool {
-        self.tx.is_none()
+        self.sched.is_synchronous()
     }
 
     /// Current breaker state (`Closed` = fully threaded routing).
     pub fn breaker_state(&self) -> BreakerState {
-        self.breaker.state()
+        self.sched.breaker_state()
+    }
+
+    /// The scheduler this client submits through.
+    pub fn scheduler(&self) -> &Arc<IoScheduler> {
+        &self.sched
     }
 
     /// Bound on how long `recv` waits for a staged load before abandoning
@@ -414,30 +320,37 @@ impl Prefetcher {
         self.timeout = timeout;
     }
 
-    /// Queue a plan. In threaded mode this blocks once `queue_depth`
-    /// plans are in flight (backpressure); in synchronous mode — or while
-    /// the breaker is open — it only enqueues and the read happens at
-    /// `recv`.
+    /// Queue a plan on the `Critical` lane. In threaded mode this blocks
+    /// once `queue_depth` plans are queued (backpressure); in synchronous
+    /// mode — or while the breaker is open — it only issues an inline
+    /// ticket and the read happens at `recv`.
     pub fn submit(&mut self, plan: PreloadPlan) -> DiskResult<()> {
         if self.closed {
             return Err(DiskError::QueueClosed);
         }
-        let ticket = self.next_ticket;
-        let job = (ticket, plan, Instant::now());
-        let threaded = self.tx.is_some() && self.breaker.route_threaded(ticket);
-        if threaded {
-            self.ensure_workers();
-            let tx = self.tx.as_ref().expect("threaded route requires tx");
-            tx.send(job).map_err(|_| DiskError::QueueClosed)?;
-        } else {
-            self.sync_queue.push_back(job);
+        let mut extents: Vec<(u64, usize)> = Vec::new();
+        let mut shape: Vec<(usize, Vec<u32>)> = Vec::with_capacity(plan.per_seq.len());
+        for (seq, seq_exts) in &plan.per_seq {
+            let mut tags = Vec::with_capacity(seq_exts.len());
+            for e in seq_exts {
+                extents.push((e.offset, e.len));
+                tags.push(e.tag);
+            }
+            shape.push((*seq, tags));
         }
-        self.routes.insert(ticket, threaded);
-        self.next_ticket += 1;
-        self.ctx
-            .counters
-            .plans_submitted
-            .fetch_add(1, Ordering::Relaxed);
+        let ticket = self.sched.submit(IoRequest {
+            lane: Lane::Critical,
+            disk: self.disk.clone(),
+            extents,
+            counters: self.counters.clone(),
+        })?;
+        self.pending.push_back(PendingPlan {
+            layer: plan.layer,
+            shape,
+            issued_at: Instant::now(),
+            ticket,
+        });
+        self.counters.plans_submitted.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
@@ -448,124 +361,69 @@ impl Prefetcher {
         if self.closed {
             return Err(DiskError::QueueClosed);
         }
-        if self.next_deliver == self.next_ticket {
-            // nothing in flight: recv without a matching submit
+        // nothing in flight: recv without a matching submit
+        let Some(p) = self.pending.pop_front() else {
             return Err(DiskError::QueueClosed);
-        }
-        let ticket = self.next_deliver;
-        let threaded = self.routes.remove(&ticket).unwrap_or(self.tx.is_some());
-        let result = if threaded {
-            self.recv_threaded(ticket)
-        } else {
-            self.run_sync(ticket)
         };
-        self.breaker
-            .on_result(ticket, threaded, result.is_ok(), &self.ctx.counters);
-        if result.is_err() {
-            self.ctx.counters.plans_failed.fetch_add(1, Ordering::Relaxed);
-        }
-        result
-    }
-
-    fn run_sync(&mut self, ticket: u64) -> DiskResult<StagedLoad> {
-        let (t, plan, issued_at) = self.sync_queue.pop_front().ok_or(DiskError::QueueClosed)?;
-        debug_assert_eq!(t, ticket);
-        self.next_deliver += 1;
-        stage_caught(&self.ctx, plan, issued_at)
-    }
-
-    fn recv_threaded(&mut self, ticket: u64) -> DiskResult<StagedLoad> {
-        loop {
-            if let Some(result) = self.reordered.remove(&ticket) {
-                self.next_deliver += 1;
-                return result;
+        match self.sched.wait(p.ticket, self.timeout) {
+            Ok(done) => {
+                let mut chunks = done.chunks.into_iter();
+                let per_seq = p
+                    .shape
+                    .into_iter()
+                    .map(|(seq, tags)| {
+                        let loads = tags
+                            .into_iter()
+                            .map(|tag| (tag, chunks.next().expect("chunk per extent")))
+                            .collect();
+                        (seq, loads)
+                    })
+                    .collect();
+                self.counters.plans_completed.fetch_add(1, Ordering::Relaxed);
+                Ok(StagedLoad {
+                    layer: p.layer,
+                    per_seq,
+                    io_time: done.io_time,
+                    issued_at: p.issued_at,
+                })
             }
-            let rx = self.done_rx.as_ref().ok_or(DiskError::QueueClosed)?;
-            match rx.recv_timeout(self.timeout) {
-                Ok((t, result)) => {
-                    // completions for abandoned tickets are stale: drop them
-                    if t >= self.next_deliver {
-                        self.reordered.insert(t, result);
-                    }
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    // abandon this ticket so later plans still deliver;
-                    // its completion, if it ever lands, is dropped above
-                    self.next_deliver += 1;
-                    return Err(DiskError::Timeout {
-                        waited: self.timeout,
-                    });
-                }
-                Err(RecvTimeoutError::Disconnected) => return Err(DiskError::QueueClosed),
+            Err(e) => {
+                self.counters.plans_failed.fetch_add(1, Ordering::Relaxed);
+                Err(e)
             }
         }
     }
 
-    /// Respawn any worker whose thread has exited (a contained panic
-    /// recycles the thread; see `spawn_worker`). Called from `submit`
-    /// before handing a job to the pool.
-    fn ensure_workers(&mut self) {
-        let (Some(job_rx), Some(done_tx)) = (self.job_rx.clone(), self.done_tx.clone()) else {
-            return;
-        };
-        for i in 0..self.workers.len() {
-            if self.workers[i].is_finished() {
-                let fresh = spawn_worker(i, job_rx.clone(), done_tx.clone(), self.ctx.clone());
-                let dead = std::mem::replace(&mut self.workers[i], fresh);
-                let _ = dead.join();
-                self.ctx
-                    .counters
-                    .workers_restarted
-                    .fetch_add(1, Ordering::Relaxed);
-            }
-        }
-    }
-
-    /// Close the pipeline: refuse new work, drain in-flight completions,
-    /// and join workers — all bounded by `grace`. A worker that outlives
-    /// the grace period is detached rather than hanging shutdown; later
-    /// `submit`/`recv` calls return `QueueClosed`.
+    /// Close the client: refuse new work and abandon in-flight plans
+    /// (their completions are dropped with the reply channels). When this
+    /// client owns its scheduler the pool is shut down too, bounded by
+    /// `grace`.
     pub fn shutdown(&mut self, grace: Duration) {
         self.closed = true;
-        // closing the job channel stops idle workers; dropping our
-        // completion sender lets the drain below observe disconnection
-        // once every worker is gone
-        drop(self.tx.take());
-        drop(self.done_tx.take());
-        let deadline = Instant::now() + grace;
-        if let Some(rx) = self.done_rx.take() {
-            loop {
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
-                }
-                match rx.recv_timeout(left) {
-                    Ok(_) => {}
-                    Err(_) => break, // disconnected (all workers exited) or out of grace
-                }
-            }
+        self.pending.clear();
+        if self.owns_sched {
+            self.sched.shutdown(grace);
         }
-        for h in self.workers.drain(..) {
-            while !h.is_finished() && Instant::now() < deadline {
-                std::thread::sleep(Duration::from_millis(1));
-            }
-            if h.is_finished() {
-                let _ = h.join();
-            }
-            // else: detach — a wedged worker must not hang shutdown
-        }
-        self.job_rx = None;
-        self.sync_queue.clear();
-        self.reordered.clear();
-        self.routes.clear();
     }
 
+    /// Client counters plus the scheduler's service counters since the
+    /// last [`reset_counters`](Prefetcher::reset_counters).
     pub fn summary(&self) -> PrefetchSummary {
-        self.ctx.counters.summary()
+        let mut s = self.counters.summary();
+        let lanes = self.sched.lane_summary().since(&relock(&self.sched_base));
+        s.worker_panics = lanes.worker_panics;
+        s.workers_restarted = lanes.workers_restarted;
+        s.breaker_trips = lanes.breaker_trips;
+        s.lane_dispatched = lanes.lane_dispatched;
+        s.lane_wait_us = lanes.lane_wait_us;
+        s.cross_plan_merges = lanes.cross_plan_merges;
+        s.aged_promotions = lanes.aged_promotions;
+        s
     }
 
     pub fn reset_counters(&self) {
-        self.ctx.counters.reset();
+        self.counters.reset();
+        *relock(&self.sched_base) = self.sched.lane_summary();
     }
 }
 
@@ -574,81 +432,6 @@ impl Drop for Prefetcher {
         let grace = self.grace;
         self.shutdown(grace);
     }
-}
-
-fn spawn_worker(
-    idx: usize,
-    job_rx: Arc<Mutex<Receiver<Job>>>,
-    done_tx: SyncSender<Completion>,
-    ctx: StageCtx,
-) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name(format!("kvswap-prefetch-{idx}"))
-        .spawn(move || loop {
-            let job = { relock(&job_rx).recv() };
-            let Ok((ticket, plan, issued_at)) = job else {
-                break;
-            };
-            let result = stage_caught(&ctx, plan, issued_at);
-            // a thread that panicked once is recycled after delivering
-            // the typed error; `ensure_workers` respawns it
-            let panicked = matches!(&result, Err(DiskError::WorkerPanic { .. }));
-            if done_tx.send((ticket, result)).is_err() || panicked {
-                break;
-            }
-        })
-        .expect("spawn prefetch worker")
-}
-
-/// Run [`stage`] with panic containment: a panicking backend (or a bug in
-/// the staging path) becomes a typed `WorkerPanic` error for this plan
-/// instead of unwinding through the pool or the engine thread.
-fn stage_caught(ctx: &StageCtx, plan: PreloadPlan, issued_at: Instant) -> DiskResult<StagedLoad> {
-    match catch_unwind(AssertUnwindSafe(|| stage(ctx, plan, issued_at))) {
-        Ok(result) => result,
-        Err(payload) => {
-            ctx.counters.worker_panics.fetch_add(1, Ordering::Relaxed);
-            let what = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "opaque panic payload".to_string());
-            Err(DiskError::WorkerPanic { what })
-        }
-    }
-}
-
-/// Execute one plan: flatten extents, read them coalesced (with retries
-/// and checksum verification), scatter the bytes back per
-/// `(sequence, tag)`.
-fn stage(ctx: &StageCtx, plan: PreloadPlan, issued_at: Instant) -> DiskResult<StagedLoad> {
-    let mut extents: Vec<(u64, usize)> = Vec::new();
-    for (_, seq_exts) in &plan.per_seq {
-        for e in seq_exts {
-            extents.push((e.offset, e.len));
-        }
-    }
-    let (chunks, io_time) =
-        read_coalesced_with(&ctx.disk, &extents, ctx.gap, &ctx.pool, &ctx.counters, &ctx.retry)?;
-    let mut chunks = chunks.into_iter();
-    let per_seq = plan
-        .per_seq
-        .into_iter()
-        .map(|(seq, seq_exts)| {
-            let loads = seq_exts
-                .into_iter()
-                .map(|e| (e.tag, chunks.next().expect("chunk per extent")))
-                .collect();
-            (seq, loads)
-        })
-        .collect();
-    ctx.counters.plans_completed.fetch_add(1, Ordering::Relaxed);
-    Ok(StagedLoad {
-        layer: plan.layer,
-        per_seq,
-        io_time,
-        issued_at,
-    })
 }
 
 /// [`read_coalesced_with`] under the default retry policy — kept as the
@@ -664,16 +447,18 @@ pub fn read_coalesced(
 }
 
 /// Read `extents` through run coalescing: merge near-adjacent extents
-/// (byte gap ≤ `gap`) into single [`ReadReq`]s, issue one batched read,
+/// (byte gap ≤ `gap`) into single `ReadReq`s, issue one batched read,
 /// then scatter each extent's bytes back out in input order. Returns the
 /// per-extent byte chunks plus the modeled device time.
 ///
-/// Fault tolerance: the first attempt is one batched submission (keeping
-/// the modeled queue-depth overlap); staged extents are then verified
-/// against their write-time checksums. Runs that failed — batched error
-/// or checksum mismatch — are re-issued individually under the plan's
-/// retry budget with jittered exponential backoff. Bytes reach the
-/// caller only after every covering run has read and verified clean.
+/// This is the scheduler's group-read path
+/// ([`sched::read_group`](super::sched)) applied to a single-plan group:
+/// the first attempt is one batched submission (keeping the modeled
+/// queue-depth overlap); staged extents are verified against their
+/// write-time checksums; runs that failed — batched error or checksum
+/// mismatch — are re-issued individually under the plan's retry budget
+/// with jittered exponential backoff. Bytes reach the caller only after
+/// every covering run has read and verified clean.
 pub fn read_coalesced_with(
     disk: &SimDisk,
     extents: &[(u64, usize)],
@@ -685,98 +470,12 @@ pub fn read_coalesced_with(
     if extents.is_empty() {
         return Ok((Vec::new(), Duration::ZERO));
     }
-    let runs = coalesce(extents, gap);
-    counters
-        .extents_requested
-        .fetch_add(extents.len() as u64, Ordering::Relaxed);
-    counters
-        .runs_issued
-        .fetch_add(runs.len() as u64, Ordering::Relaxed);
-    disk.stats()
-        .record_coalesce(extents.len() as u64, runs.len() as u64);
-
-    let mut reqs: Vec<ReadReq> = runs
-        .iter()
-        .map(|r| ReadReq::with_buf(r.offset, pool.take(), r.len))
-        .collect();
-    let mut io_time = Duration::ZERO;
-    let mut budget = retry.budget();
-
-    // First attempt: the whole plan as one batched submission.
-    let pending: Vec<usize> = match disk.read_batch(&mut reqs) {
-        Ok(d) => {
-            io_time += d;
-            (0..runs.len())
-                .filter(|&ri| verify_run(disk, &runs[ri], &reqs[ri], extents, counters).is_err())
-                .collect()
-        }
-        Err(e) if e.is_retryable() => (0..runs.len()).collect(),
-        Err(e) => return Err(e),
-    };
-
-    // Recovery: re-issue only the failed runs, individually, under the
-    // per-plan budget. Every read here is a re-issue of a run that
-    // already failed once (batched error or checksum mismatch), so each
-    // counts as a retry whether or not it succeeds.
-    for ri in pending {
-        let mut attempt = 0u32;
-        loop {
-            counters.io_retries.fetch_add(1, Ordering::Relaxed);
-            disk.stats().record_retry();
-            let read = disk.read_batch(std::slice::from_mut(&mut reqs[ri]));
-            let verified = read.and_then(|d| {
-                verify_run(disk, &runs[ri], &reqs[ri], extents, counters)?;
-                Ok(d)
-            });
-            match verified {
-                Ok(d) => {
-                    io_time += d;
-                    break;
-                }
-                Err(e) => {
-                    if !e.is_retryable() || !budget.try_consume() {
-                        return Err(e);
-                    }
-                    retry.sleep_before_retry(attempt);
-                    attempt += 1;
-                }
-            }
-        }
-    }
-
-    let mut out: Vec<Vec<u8>> = vec![Vec::new(); extents.len()];
-    let mut staged = 0u64;
-    for (run, req) in runs.iter().zip(&reqs) {
-        for &(idx, delta) in &run.members {
-            let len = extents[idx].1;
-            out[idx] = req.buf[delta..delta + len].to_vec();
-            staged += len as u64;
-        }
-    }
-    counters.bytes_staged.fetch_add(staged, Ordering::Relaxed);
-    for req in reqs {
-        pool.put(req.buf);
-    }
-    Ok((out, io_time))
-}
-
-/// Verify every member extent of `run` against its write-time checksum.
-/// Extents the disk never stamped at exactly that (offset, len) pass.
-fn verify_run(
-    disk: &SimDisk,
-    run: &Run,
-    req: &ReadReq,
-    extents: &[(u64, usize)],
-    counters: &PrefetchCounters,
-) -> DiskResult<()> {
-    for &(idx, delta) in &run.members {
-        let (offset, len) = extents[idx];
-        if let Err(e) = disk.verify_extent(offset, &req.buf[delta..delta + len]) {
-            counters.corrupt_detected.fetch_add(1, Ordering::Relaxed);
-            return Err(e);
-        }
-    }
-    Ok(())
+    let members = [sched::GroupMember { extents, counters }];
+    let (mut chunks, mut times) = sched::read_group(disk, &members, gap, pool, retry)?;
+    Ok((
+        chunks.pop().expect("one member"),
+        times.pop().expect("one member"),
+    ))
 }
 
 #[cfg(test)]
@@ -786,6 +485,7 @@ mod tests {
     use crate::disk::backend::{Backend, MemBackend};
     use crate::disk::fault::{Fault, FaultBackend};
     use crate::disk::profile::DiskProfile;
+    use std::sync::Arc;
 
     fn disk_with_image(n: usize) -> (Arc<SimDisk>, Vec<u8>) {
         let image: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
@@ -805,6 +505,17 @@ mod tests {
             breaker_threshold,
             breaker_probe_after: probe_after,
         })
+    }
+
+    fn pf_cfg(workers: usize, queue_depth: usize, coalesce_gap: u64) -> PrefetchConfig {
+        PrefetchConfig {
+            workers,
+            queue_depth,
+            coalesce_gap,
+            // window 1 keeps per-plan counters exact for the assertions
+            dispatch_window: 1,
+            ..PrefetchConfig::default()
+        }
     }
 
     fn plan(layer: usize, extents: &[(u64, usize)]) -> PreloadPlan {
@@ -839,11 +550,7 @@ mod tests {
     #[test]
     fn threaded_pipeline_delivers_in_order_with_correct_bytes() {
         let (disk, image) = disk_with_image(1 << 16);
-        let cfg = PrefetchConfig {
-            workers: 3,
-            queue_depth: 2,
-            coalesce_gap: 64,
-        };
+        let cfg = pf_cfg(3, 2, 64);
         let mut p = Prefetcher::spawn(disk, &cfg);
         assert!(!p.is_synchronous());
         assert_eq!(p.breaker_state(), BreakerState::Closed);
@@ -873,6 +580,8 @@ mod tests {
         // still at most one run per extent
         assert!(s.runs <= s.extents);
         assert!(s.coalesce_factor() >= 1.0);
+        // every plan was dispatched on the critical lane
+        assert_eq!(s.lane_dispatched[Lane::Critical.idx()], 6);
     }
 
     #[test]
@@ -918,12 +627,7 @@ mod tests {
     #[test]
     fn out_of_bounds_plan_surfaces_typed_error() {
         let (disk, _) = disk_with_image(1024);
-        let cfg = PrefetchConfig {
-            workers: 1,
-            queue_depth: 1,
-            coalesce_gap: 0,
-        };
-        let mut p = Prefetcher::spawn(disk, &cfg);
+        let mut p = Prefetcher::spawn(disk, &pf_cfg(1, 1, 0));
         p.submit(plan(0, &[(4096, 64)])).unwrap();
         assert!(matches!(p.recv(), Err(DiskError::OutOfBounds { .. })));
         let s = p.summary();
@@ -933,12 +637,7 @@ mod tests {
     #[test]
     fn drop_joins_workers_with_inflight_completions() {
         let (disk, _) = disk_with_image(1 << 14);
-        let cfg = PrefetchConfig {
-            workers: 2,
-            queue_depth: 2,
-            coalesce_gap: 0,
-        };
-        let mut p = Prefetcher::spawn(disk, &cfg);
+        let mut p = Prefetcher::spawn(disk, &pf_cfg(2, 2, 0));
         for l in 0..4 {
             p.submit(plan(l, &[(0, 128)])).unwrap();
         }
@@ -949,12 +648,7 @@ mod tests {
     #[test]
     fn shutdown_is_bounded_and_flags_queue_closed() {
         let (disk, _) = disk_with_image(1 << 14);
-        let cfg = PrefetchConfig {
-            workers: 2,
-            queue_depth: 2,
-            coalesce_gap: 0,
-        };
-        let mut p = Prefetcher::spawn(disk, &cfg);
+        let mut p = Prefetcher::spawn(disk, &pf_cfg(2, 2, 0));
         p.submit(plan(0, &[(0, 128)])).unwrap();
         let t0 = Instant::now();
         p.shutdown(Duration::from_secs(2));
@@ -1033,13 +727,8 @@ mod tests {
         let fb = Arc::new(FaultBackend::quiet(inner));
         let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), fb.clone(), None));
         disk.write(0, &image).unwrap();
-        let cfg = PrefetchConfig {
-            workers: 2,
-            queue_depth: 2,
-            coalesce_gap: 0,
-        };
         // threshold high enough that one panic does not trip the breaker
-        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 8, 8));
+        let mut p = Prefetcher::spawn_with(disk, &pf_cfg(2, 2, 0), fast_retry(0, 8, 8));
         fb.script_at(0, Fault::Panic);
         p.submit(plan(0, &[(0, 256)])).unwrap();
         let err = p.recv().unwrap_err();
@@ -1076,19 +765,23 @@ mod tests {
     }
 
     #[test]
+    fn buffer_pool_drops_oversized_buffers() {
+        let pool = BufferPool::with_high_water(8, 1024);
+        pool.put(Vec::with_capacity(4096)); // above high water: dropped
+        assert_eq!(pool.take().capacity(), 0);
+        pool.put(Vec::with_capacity(512)); // under: retained
+        assert!(pool.take().capacity() >= 512);
+    }
+
+    #[test]
     fn breaker_trips_to_sync_and_recovers_via_probe() {
         let image: Vec<u8> = vec![7u8; 8192];
         let inner = Arc::new(MemBackend::new());
         let fb = Arc::new(FaultBackend::quiet(inner));
         let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), fb.clone(), None));
         disk.write(0, &image).unwrap();
-        let cfg = PrefetchConfig {
-            workers: 2,
-            queue_depth: 2,
-            coalesce_gap: 0,
-        };
         // no retries, trip after 3 failures, probe after 2 clean sync plans
-        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 3, 2));
+        let mut p = Prefetcher::spawn_with(disk, &pf_cfg(2, 2, 0), fast_retry(0, 3, 2));
         fb.poison(0, 8192);
 
         let mut layer = 0;
@@ -1132,12 +825,7 @@ mod tests {
         slow.script_at(0, Fault::LatencySpike(Duration::from_millis(250)));
         let disk = Arc::new(SimDisk::new(DiskProfile::nvme(), slow, None));
         disk.write(0, &image).unwrap();
-        let cfg = PrefetchConfig {
-            workers: 1,
-            queue_depth: 2,
-            coalesce_gap: 0,
-        };
-        let mut p = Prefetcher::spawn_with(disk, &cfg, fast_retry(0, 8, 8));
+        let mut p = Prefetcher::spawn_with(disk, &pf_cfg(1, 2, 0), fast_retry(0, 8, 8));
         p.set_timeout(Duration::from_millis(30));
         p.submit(plan(0, &[(0, 128)])).unwrap(); // will stall past timeout
         p.submit(plan(1, &[(256, 128)])).unwrap();

@@ -144,6 +144,14 @@ impl SimDisk {
     pub fn is_empty(&self) -> bool {
         self.backend.is_empty()
     }
+
+    /// Shrink the backing store to `len` bytes (store compaction). No
+    /// time is modeled: truncation is a metadata operation, not a data
+    /// transfer. Stale checksum stamps past the cut are harmless — the
+    /// space is only read again after being rewritten (and restamped).
+    pub fn truncate(&self, len: u64) -> DiskResult<()> {
+        self.backend.truncate(len)
+    }
 }
 
 #[cfg(test)]

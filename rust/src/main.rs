@@ -87,16 +87,17 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
     if args.flag("no-reuse") {
         kv.use_reuse = false;
     }
+    let pf_default = PrefetchConfig::default();
     let prefetch = if args.flag("sync-io") {
         PrefetchConfig::synchronous()
     } else {
         PrefetchConfig {
-            workers: args.usize_or("prefetch-workers", PrefetchConfig::default().workers),
-            queue_depth: args.usize_or("queue-depth", PrefetchConfig::default().queue_depth),
-            coalesce_gap: args.usize_or(
-                "coalesce-gap",
-                PrefetchConfig::default().coalesce_gap as usize,
-            ) as u64,
+            workers: args.usize_or("prefetch-workers", pf_default.workers),
+            queue_depth: args.usize_or("queue-depth", pf_default.queue_depth),
+            coalesce_gap: args.usize_or("coalesce-gap", pf_default.coalesce_gap as usize) as u64,
+            dispatch_window: args.usize_or("dispatch-window", pf_default.dispatch_window),
+            aging_ms: args.u64_or("aging-ms", pf_default.aging_ms),
+            unified_io: !args.flag("separate-io"),
         }
     };
     let storage = match args.get("storage-file") {
@@ -124,6 +125,7 @@ fn parse_common(args: &Args) -> anyhow::Result<EngineConfig> {
             args.get("store-pipelined-restore"),
             Some("off") | Some("false") | Some("0")
         ),
+        compact_free_frac: args.f64_or("store-compact-frac", store_default.compact_free_frac),
     };
     let retry_default = RetryConfig::default();
     let retry = RetryConfig {
@@ -197,6 +199,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             stats.degraded_steps
         );
     }
+    let lanes = engine.lane_summary();
+    println!(
+        "io lanes: critical {} ({:.0}us mean wait), warm {}, background {}, \
+         {} cross-plan merges, {} aged promotions",
+        lanes.lane_dispatched[kvswap::disk::Lane::Critical.idx()],
+        lanes.mean_wait_us(kvswap::disk::Lane::Critical),
+        lanes.lane_dispatched[kvswap::disk::Lane::Warm.idx()],
+        lanes.lane_dispatched[kvswap::disk::Lane::Background.idx()],
+        lanes.cross_plan_merges,
+        lanes.aged_promotions
+    );
     println!(
         "management memory: {}",
         kvswap::util::fmt_bytes(engine.management_bytes())

@@ -11,6 +11,13 @@
 //! What a scrub finds is persisted: every confirmed-bad record becomes a
 //! [`CorruptionSite`] in the manifest's corruption log, surviving
 //! restarts for post-mortem analysis of a flaky device.
+//!
+//! Scrub *reads* are maintenance traffic: when the store is attached to
+//! the engine's unified I/O scheduler they submit through the
+//! `Background` lane, queueing behind decode-critical preloads and warm
+//! restores (dispatched only when idle or aged past the starvation
+//! bound). Heal retries stay direct — a record already suspected bad
+//! should be re-verified immediately, not sit in a queue.
 
 use std::time::Instant;
 

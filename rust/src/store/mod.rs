@@ -20,6 +20,32 @@
 //! - [`maintain`] — deadline/idle-budget scrub scheduler with a
 //!   persisted corruption log.
 //!
+//! ## Scheduler lanes
+//!
+//! When [`PersistentStore::attach_scheduler`] wires the store to the
+//! engine's unified [`IoScheduler`](crate::disk::IoScheduler), its two
+//! read streams route through priority lanes instead of hitting the
+//! device directly: pipelined warm restores submit as `Warm`
+//! ([`PersistentStore::submit_chunk`] / `complete_chunk`), and scrub
+//! verification reads submit as `Background` — so maintenance queues
+//! behind decode-critical preloads and only runs when aged past the
+//! starvation bound, never by preempting them. Unattached (standalone
+//! stores, tests), both paths fall back to direct device reads with
+//! identical semantics.
+//!
+//! ## Compaction
+//!
+//! Eviction and quarantine free *slots* but never shrink the data file;
+//! a long-lived store churns toward a file full of holes. When the
+//! freed-slot fraction exceeds `StoreConfig::compact_free_frac` after a
+//! scrub pass, `maintain()` rewrites live records contiguously into the
+//! lowest slots and truncates the tail
+//! ([`PersistentStore::compact_now`]). The move is crash-safe through
+//! the same manifest commit point as every other mutation: bytes move
+//! first, the remapped manifest publishes via temp+fsync+rename, then
+//! the file is cut — a crash in between leaves checksummed-detectable
+//! (never silently wrong) stale entries.
+//!
 //! ## Failure model & degradation ladder
 //!
 //! Mirrors the disk pipeline (`disk/mod.rs`), adapted to data that must
@@ -58,13 +84,14 @@ pub mod maintain;
 pub mod manifest;
 
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::config::{FaultConfig, StoreConfig};
+use crate::disk::prefetch::PrefetchCounters;
 use crate::disk::{
-    relock, Backend, DiskError, DiskProfile, DiskSnapshot, FaultBackend, FileBackend, MemBackend,
-    SimDisk,
+    relock, Backend, DiskError, DiskProfile, DiskSnapshot, FaultBackend, FileBackend, IoRequest,
+    IoScheduler, Lane, MemBackend, SimDisk, Ticket,
 };
 use crate::kvcache::DiskLayout;
 use crate::util::json::Json;
@@ -90,6 +117,20 @@ pub struct RestoredChunk {
     /// Modeled device time of the records read for this slice; the
     /// engine charges only the residual that compute failed to hide.
     pub io_time: Duration,
+}
+
+/// An in-flight `Warm`-lane restore chunk: the scheduler ticket plus the
+/// geometry needed to decode the staged records (and to attribute a
+/// corruption site if the read ultimately fails). Redeem with
+/// [`PersistentStore::complete_chunk`].
+pub struct ChunkTicket {
+    sched: Arc<IoScheduler>,
+    ticket: Ticket,
+    entry: u64,
+    slot: usize,
+    layer: usize,
+    start: usize,
+    tokens: usize,
 }
 
 /// A confirmed stored prefix for an incoming prompt.
@@ -119,6 +160,11 @@ pub struct StoreCounters {
     pub quarantined: u64,
     pub scrub_passes: u64,
     pub records_scrubbed: u64,
+    /// Data-file compactions run by `maintain()` (live records rewritten
+    /// contiguously, tail truncated).
+    pub compactions: u64,
+    /// Bytes cut off the data file by compaction, cumulative.
+    pub reclaimed_bytes: u64,
 }
 
 impl StoreCounters {
@@ -136,6 +182,8 @@ impl StoreCounters {
             ("quarantined", (self.quarantined as usize).into()),
             ("scrub_passes", (self.scrub_passes as usize).into()),
             ("records_scrubbed", (self.records_scrubbed as usize).into()),
+            ("compactions", (self.compactions as usize).into()),
+            ("reclaimed_bytes", (self.reclaimed_bytes as usize).into()),
         ])
     }
 }
@@ -161,6 +209,16 @@ pub struct PersistentStore {
     layout: DiskLayout,
     dir: Option<PathBuf>,
     capacity_bytes: u64,
+    /// Freed-slot fraction above which `maintain()` compacts the data
+    /// file (`>= 1.0` disables).
+    compact_free_frac: f64,
+    /// Shared I/O scheduler, when attached: restore chunks go out on the
+    /// `Warm` lane and scrub reads on `Background` instead of hitting the
+    /// device directly. `Weak` because the engine owns the scheduler.
+    sched: Mutex<Option<Weak<IoScheduler>>>,
+    /// Client counter block for scheduler submissions (the store's
+    /// staging traffic, kept apart from the decode prefetcher's).
+    io_counters: Arc<PrefetchCounters>,
     inner: Mutex<Inner>,
 }
 
@@ -269,6 +327,9 @@ impl PersistentStore {
             layout,
             dir: cfg.dir.clone(),
             capacity_bytes: cfg.capacity_bytes,
+            compact_free_frac: cfg.compact_free_frac,
+            sched: Mutex::new(None),
+            io_counters: Arc::new(PrefetchCounters::default()),
             inner: Mutex::new(Inner {
                 manifest,
                 index,
@@ -416,6 +477,137 @@ impl PersistentStore {
             v_rows,
             io_time,
         })
+    }
+
+    /// Route this store's restore and scrub reads through a shared
+    /// [`IoScheduler`]: restore chunks submit on the `Warm` lane (so
+    /// adjacent layers' records can merge with other queued plans into
+    /// sequential reads) and scrub reads on `Background` (so maintenance
+    /// can never delay a decode-critical preload beyond the aging bound).
+    /// Held as a `Weak` — when the engine drops the scheduler the store
+    /// falls back to direct device reads.
+    pub fn attach_scheduler(&self, sched: &Arc<IoScheduler>) {
+        *relock(&self.sched) = Some(Arc::downgrade(sched));
+    }
+
+    /// Revert to direct device reads. Called when a separate-pools
+    /// engine adopts a store that an earlier (unified) engine attached —
+    /// a shared store must always route per the *current* engine's mode,
+    /// not a predecessor's.
+    pub fn detach_scheduler(&self) {
+        *relock(&self.sched) = None;
+    }
+
+    fn scheduler(&self) -> Option<Arc<IoScheduler>> {
+        relock(&self.sched).as_ref().and_then(|w| w.upgrade())
+    }
+
+    /// Submit the record reads for one `(layer, token-range)` chunk on
+    /// the scheduler's `Warm` lane without waiting. Returns `None` when
+    /// no scheduler is attached (or it is shutting down, or the range is
+    /// invalid) — the caller then uses [`restore_chunk`](Self::restore_chunk)
+    /// directly, which reports the precise error.
+    pub fn submit_chunk(
+        &self,
+        m: &PrefixMatch,
+        layer: usize,
+        start: usize,
+        n_tokens: usize,
+    ) -> Option<ChunkTicket> {
+        let sched = self.scheduler()?;
+        let g = self.layout.group;
+        if layer >= self.layout.n_layers
+            || n_tokens == 0
+            || start % g != 0
+            || n_tokens % g != 0
+            || start + n_tokens > m.tokens
+        {
+            return None;
+        }
+        let slot = relock(&self.inner)
+            .manifest
+            .entries
+            .get(&m.entry)
+            .map(|e| e.slot)?;
+        let payload = self.layout.group_payload_bytes() as usize;
+        let extents: Vec<(u64, usize)> = (start / g..(start + n_tokens) / g)
+            .map(|gi| (self.layout.offset(slot, layer, gi), payload))
+            .collect();
+        let ticket = sched
+            .submit(IoRequest {
+                lane: Lane::Warm,
+                disk: self.disk.clone(),
+                extents,
+                counters: self.io_counters.clone(),
+            })
+            .ok()?;
+        Some(ChunkTicket {
+            sched,
+            ticket,
+            entry: m.entry,
+            slot,
+            layer,
+            start,
+            tokens: n_tokens,
+        })
+    }
+
+    /// Redeem a [`ChunkTicket`]: block for the staged records and decode
+    /// them. Same contract as [`restore_chunk`](Self::restore_chunk) —
+    /// bit-identical rows on success; on failure a `Corrupt` outcome
+    /// records its corruption site and the caller degrades at chunk
+    /// granularity. Does not bump `restored_tokens` (pipelined callers
+    /// credit what actually committed).
+    pub fn complete_chunk(&self, t: ChunkTicket) -> anyhow::Result<RestoredChunk> {
+        let ChunkTicket {
+            sched,
+            ticket,
+            entry,
+            slot,
+            layer,
+            start,
+            tokens,
+        } = t;
+        match sched.wait(ticket, Duration::from_secs(60)) {
+            Ok(done) => {
+                let hd = self.layout.hd;
+                let mut k_rows = Vec::with_capacity(tokens * hd);
+                let mut v_rows = Vec::with_capacity(tokens * hd);
+                for buf in &done.chunks {
+                    let (k, v) = self.layout.decode_group(buf);
+                    k_rows.extend_from_slice(&k);
+                    v_rows.extend_from_slice(&v);
+                }
+                Ok(RestoredChunk {
+                    layer,
+                    start,
+                    tokens,
+                    k_rows,
+                    v_rows,
+                    io_time: done.io_time,
+                })
+            }
+            Err(e) => {
+                // map the failing offset back to its group index so the
+                // corruption site names the exact record
+                let g = self.layout.group;
+                let gi = match &e {
+                    DiskError::Corrupt { offset, .. }
+                    | DiskError::Io { offset, .. }
+                    | DiskError::OutOfBounds { offset, .. } => (start / g..(start + tokens) / g)
+                        .find(|&gi| self.layout.offset(slot, layer, gi) == *offset)
+                        .unwrap_or(start / g),
+                    _ => start / g,
+                };
+                if matches!(e, DiskError::Corrupt { .. }) {
+                    let off = self.layout.offset(slot, layer, gi);
+                    self.record_corruption(entry, layer, gi, off, &e);
+                }
+                Err(anyhow::anyhow!(
+                    "store restore failed at entry {entry:016x} layer {layer} group {gi}: {e}"
+                ))
+            }
+        }
     }
 
     /// Count `n_tokens` as served from the store. [`restore`](Self::restore)
@@ -572,7 +764,9 @@ impl PersistentStore {
     }
 
     /// Idle-tick entry point: runs one budgeted scrub pass when the
-    /// deadline has elapsed, else returns `None` immediately.
+    /// deadline has elapsed (else returns `None` immediately), then
+    /// compacts the data file if eviction has left enough freed-slot
+    /// space behind.
     pub fn maintain(&self, now: Instant) -> Option<ScrubReport> {
         let batch = {
             let mut inner = relock(&self.inner);
@@ -584,7 +778,128 @@ impl PersistentStore {
             keys.sort_unstable();
             inner.maintainer.next_batch(&keys)
         };
-        Some(self.scrub_entries(&batch))
+        let rep = self.scrub_entries(&batch);
+        self.compact_now();
+        Some(rep)
+    }
+
+    /// Compact the data file now if the freed-slot fraction exceeds the
+    /// configured threshold: live records are rewritten contiguously into
+    /// the lowest slots and the tail is truncated. Returns the bytes
+    /// reclaimed (`0` = not triggered, pinned readers present, or
+    /// disabled).
+    ///
+    /// Crash safety: record moves happen first, then the manifest's new
+    /// slot map commits through the existing temp+fsync+rename path, then
+    /// the tail is cut. A crash between a move and the commit leaves the
+    /// old manifest pointing entries at partially overwritten slots —
+    /// their checksums fail on the next open/read and the entries drop as
+    /// detected corruption (a clean miss), never as silently wrong bytes.
+    pub fn compact_now(&self) -> u64 {
+        let mut inner = relock(&self.inner);
+        self.compact_locked(&mut inner)
+    }
+
+    fn compact_locked(&self, inner: &mut Inner) -> u64 {
+        if self.compact_free_frac >= 1.0 || inner.next_slot == 0 || inner.free_slots.is_empty() {
+            return 0;
+        }
+        let frac = inner.free_slots.len() as f64 / inner.next_slot as f64;
+        if frac <= self.compact_free_frac {
+            return 0;
+        }
+        // Never move records under a pinned reader: a restore in flight
+        // addresses the old slot lock-free.
+        if inner.manifest.entries.keys().any(|k| inner.lru.is_pinned(*k)) {
+            return 0;
+        }
+        let g = self.layout.group;
+        let payload = self.layout.group_payload_bytes() as usize;
+        // Live entries ascending by slot, each assigned the next dense
+        // target slot: target <= source always, so a move never lands on
+        // a slot whose live record has not already been copied out.
+        let mut order: Vec<(u64, usize, usize)> = inner
+            .manifest
+            .entries
+            .iter()
+            .map(|(&k, e)| (k, e.slot, e.n_groups(g)))
+            .collect();
+        order.sort_unstable_by_key(|&(_, slot, _)| slot);
+        let mut target = 0usize;
+        let mut end = 0u64;
+        let mut bad_reads: Vec<(u64, usize, usize, u64, String)> = Vec::new();
+        for &(key, slot, n_groups) in &order {
+            let mut ok = true;
+            if slot != target {
+                'rec: for layer in 0..self.layout.n_layers {
+                    for gi in 0..n_groups {
+                        let src = self.layout.offset(slot, layer, gi);
+                        let mut buf = vec![0u8; payload];
+                        // verified read with one heal retry, like scrub
+                        let read = self
+                            .disk
+                            .read(src, &mut buf)
+                            .or_else(|_| self.disk.read(src, &mut buf));
+                        match read {
+                            Ok(_) => {
+                                let dst = self.layout.offset(target, layer, gi);
+                                if self.disk.write(dst, &buf).is_err() {
+                                    ok = false;
+                                }
+                            }
+                            Err(e) => {
+                                bad_reads.push((key, layer, gi, src, e.to_string()));
+                                ok = false;
+                            }
+                        }
+                        if !ok {
+                            break 'rec;
+                        }
+                    }
+                }
+            }
+            if ok {
+                if let Some(e) = inner.manifest.entries.get_mut(&key) {
+                    e.slot = target;
+                }
+                end = end.max(
+                    self.layout
+                        .offset(target, self.layout.n_layers - 1, n_groups - 1)
+                        + self.layout.group_stride(),
+                );
+                target += 1;
+            } else {
+                // a record that will not read clean (or a failed rewrite)
+                // quarantines its entry rather than aborting the pass
+                self.quarantine_locked(inner, key);
+            }
+        }
+        for (entry, layer, group, offset, detail) in bad_reads {
+            let at = inner.lru.clock();
+            inner.manifest.corruption_log.push(CorruptionSite {
+                entry,
+                layer,
+                group,
+                offset,
+                detail,
+                at,
+            });
+            inner.counters.corruptions += 1;
+        }
+        inner.free_slots.clear();
+        inner.next_slot = target;
+        let reclaimed = self.disk.len().saturating_sub(end);
+        // commit the new slot map before cutting the tail
+        let _ = self.persist_locked(inner);
+        let _ = self.disk.truncate(end);
+        inner.counters.compactions += 1;
+        inner.counters.reclaimed_bytes += reclaimed;
+        crate::log_info!(
+            "store: compacted {} live entries, reclaimed {} bytes",
+            target,
+            reclaimed
+        );
+        reclaimed
     }
 
     /// Scrub up to `budget` entries right now, deadline or not (CLI and
@@ -620,21 +935,23 @@ impl PersistentStore {
             'entry: for layer in 0..self.layout.n_layers {
                 for gi in 0..n_groups {
                     let off = self.layout.offset(slot, layer, gi);
-                    let mut buf = vec![0u8; payload];
-                    match self.disk.read(off, &mut buf) {
+                    match self.scrub_read(off, payload) {
                         Ok(_) => rep.records_clean += 1,
-                        // one heal attempt: transient faults clear
-                        Err(_) => match self.disk.read(off, &mut buf) {
-                            Ok(_) => {
-                                rep.healed += 1;
-                                rep.records_clean += 1;
-                                relock(&self.inner).counters.healed += 1;
+                        // one heal attempt, direct: transient faults clear
+                        Err(_) => {
+                            let mut buf = vec![0u8; payload];
+                            match self.disk.read(off, &mut buf) {
+                                Ok(_) => {
+                                    rep.healed += 1;
+                                    rep.records_clean += 1;
+                                    relock(&self.inner).counters.healed += 1;
+                                }
+                                Err(e) => {
+                                    bad = Some((layer, gi, off, e.to_string()));
+                                    break 'entry;
+                                }
                             }
-                            Err(e) => {
-                                bad = Some((layer, gi, off, e.to_string()));
-                                break 'entry;
-                            }
-                        },
+                        }
                     }
                 }
             }
@@ -663,6 +980,26 @@ impl PersistentStore {
         inner.counters.scrub_passes += 1;
         inner.counters.records_scrubbed += (rep.records_clean + rep.corruptions) as u64;
         rep
+    }
+
+    /// One verification read for the scrub pass: through the scheduler's
+    /// `Background` lane when attached — maintenance must queue behind
+    /// (and only age past, never preempt) decode-critical work — else
+    /// directly against the device.
+    fn scrub_read(&self, off: u64, len: usize) -> Result<(), DiskError> {
+        if let Some(sched) = self.scheduler() {
+            let ticket = sched.submit(IoRequest {
+                lane: Lane::Background,
+                disk: self.disk.clone(),
+                extents: vec![(off, len)],
+                counters: self.io_counters.clone(),
+            });
+            if let Ok(t) = ticket {
+                return sched.wait(t, Duration::from_secs(60)).map(|_| ());
+            }
+        }
+        let mut buf = vec![0u8; len];
+        self.disk.read(off, &mut buf).map(|_| ())
     }
 
     /// One verified record read with a single heal retry. Returns the

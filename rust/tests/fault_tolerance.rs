@@ -87,6 +87,8 @@ fn staging_is_bit_identical_under_probabilistic_faults() {
         workers: 2,
         queue_depth: 2,
         coalesce_gap: 0,
+        dispatch_window: 1,
+        ..PrefetchConfig::default()
     };
     let retry = RetryPolicy::new(RetryConfig {
         max_retries: 6,
@@ -135,6 +137,8 @@ fn scripted_bit_flip_is_detected_and_healed_by_reread() {
         workers: 0,
         queue_depth: 2,
         coalesce_gap: 0,
+        dispatch_window: 1,
+        ..PrefetchConfig::default()
     };
     let mut p = Prefetcher::spawn_with(disk.clone(), &pf_cfg, RetryPolicy::default());
     p.submit(plan_for(0, &[2])).unwrap();
@@ -163,6 +167,8 @@ fn persistent_silent_corruption_surfaces_typed_corrupt_error() {
         workers: 0,
         queue_depth: 1,
         coalesce_gap: 0,
+        dispatch_window: 1,
+        ..PrefetchConfig::default()
     };
     let retry = RetryPolicy::new(RetryConfig {
         max_retries: 2,
@@ -200,6 +206,8 @@ fn breaker_opens_under_persistent_faults_and_recovers_after_heal() {
         workers: 1,
         queue_depth: 2,
         coalesce_gap: 0,
+        dispatch_window: 1,
+        ..PrefetchConfig::default()
     };
     let retry = RetryPolicy::new(RetryConfig {
         max_retries: 0,
@@ -244,6 +252,8 @@ fn worker_panic_is_contained_and_shutdown_is_bounded() {
         workers: 2,
         queue_depth: 2,
         coalesce_gap: 0,
+        dispatch_window: 1,
+        ..PrefetchConfig::default()
     };
     let mut p = Prefetcher::spawn_with(disk, &pf_cfg, RetryPolicy::disabled());
     p.submit(plan_for(0, &[1])).unwrap();

@@ -29,6 +29,8 @@ fn cfg_mem(capacity: u64) -> StoreConfig {
         scrub_interval_s: 3600.0,
         scrub_budget: 4,
         pipelined_restore: true,
+        // compaction off by default; the compaction tests opt in
+        compact_free_frac: 1.0,
     }
 }
 
@@ -428,4 +430,119 @@ fn maintainer_gates_on_deadline_and_rotates_budget() {
     assert_eq!(c.scrub_passes, 3);
     assert_eq!(c.records_scrubbed, 12);
     assert_eq!(c.corruptions, 0);
+}
+
+#[test]
+fn compaction_reclaims_freed_slots_and_keeps_restores_bit_identical() {
+    let lo = layout();
+    let mut cfg = cfg_mem(4096);
+    cfg.compact_free_frac = 0.4;
+    let mem = Arc::new(MemBackend::new());
+    let store = PersistentStore::open_with_backend(
+        &cfg,
+        DiskProfile::nvme(),
+        lo.clone(),
+        mem.clone(),
+    )
+    .unwrap();
+
+    // four 8-token entries fill slots 0..3 exactly
+    let toks: Vec<Vec<i32>> = (0..4u64).map(|i| tokens_for(8, 200 + i)).collect();
+    let rows: Vec<Vec<(Vec<f32>, Vec<f32>)>> =
+        (0..4u64).map(|i| rows_for(&lo, 8, 210 + i)).collect();
+    for (t, r) in toks.iter().zip(&rows) {
+        assert_eq!(store.save(t, r).unwrap(), 8);
+    }
+    assert_eq!(store.entries(), 4);
+
+    // a 16-token entry evicts two victims (A and B, after freshening C
+    // and D) but reuses only one of their slots: one freed slot stays
+    assert!(store.lookup(&toks[2]).is_some());
+    assert!(store.lookup(&toks[3]).is_some());
+    let (big_t, big_r) = (tokens_for(16, 300), rows_for(&lo, 16, 301));
+    assert_eq!(store.save(&big_t, &big_r).unwrap(), 16);
+    assert_eq!(store.entries(), 3);
+    assert_eq!(store.compact_now(), 0, "1/4 freed is below the 0.4 gate");
+
+    // quarantining D (still in slot 3) frees a second slot: 2/4 crosses
+    let off = lo.offset(3, 0, 0);
+    let mut b = [0u8; 1];
+    mem.read_at(off + 3, &mut b).unwrap();
+    mem.write_at(off + 3, &[b[0] ^ 0x01]).unwrap();
+    assert_eq!(store.scrub_now(usize::MAX).quarantined, 1);
+    assert_eq!(store.entries(), 2);
+
+    // a pinned (in-restore) reader blocks the whole pass
+    let mc = store.lookup(&toks[2]).unwrap();
+    store.pin(mc.entry);
+    assert_eq!(store.compact_now(), 0, "pinned reader must block compaction");
+    store.unpin(mc.entry);
+
+    let len_before = mem.len();
+    let reclaimed = store.compact_now();
+    assert!(reclaimed > 0, "2/4 freed must trigger compaction");
+    assert!(mem.len() < len_before, "data file shrank");
+    let c = store.counters();
+    assert_eq!(c.compactions, 1);
+    assert_eq!(c.reclaimed_bytes, reclaimed);
+    assert_eq!(store.compact_now(), 0, "no freed slots left after the pass");
+
+    // survivors restore bit-identically from their relocated slots
+    let mc = store.lookup(&toks[2]).expect("C survived compaction");
+    let got = store.restore(&mc, 8).unwrap();
+    for (layer, (k, v)) in got.iter().enumerate() {
+        assert_eq!(bits(k), bits(&rows[2][layer].0), "layer {layer} K moved intact");
+        assert_eq!(bits(v), bits(&rows[2][layer].1), "layer {layer} V moved intact");
+    }
+    let mb = store.lookup(&big_t).expect("big entry survived compaction");
+    let got = store.restore(&mb, 16).unwrap();
+    for (layer, (k, v)) in got.iter().enumerate() {
+        assert_eq!(bits(k), bits(&big_r[layer].0), "layer {layer} K moved intact");
+        assert_eq!(bits(v), bits(&big_r[layer].1), "layer {layer} V moved intact");
+    }
+}
+
+#[test]
+fn compaction_is_crash_safe_across_reopen() {
+    let dir = tmp_dir("compact");
+    let lo = layout();
+    let mut cfg = cfg_dir(&dir, 4096);
+    cfg.compact_free_frac = 0.4;
+    let fault = FaultConfig::default();
+    let (b1_t, b1_r) = (tokens_for(16, 400), rows_for(&lo, 16, 401));
+    let (b2_t, b2_r) = (tokens_for(16, 402), rows_for(&lo, 16, 403));
+    {
+        let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+        for s in 0..4u64 {
+            assert_eq!(
+                store.save(&tokens_for(8, 410 + s), &rows_for(&lo, 8, 420 + s)).unwrap(),
+                8
+            );
+        }
+        // each 16-token save evicts two small entries but takes only one
+        // slot back: two freed slots remain and 2/4 crosses the gate
+        assert_eq!(store.save(&b1_t, &b1_r).unwrap(), 16);
+        assert_eq!(store.save(&b2_t, &b2_r).unwrap(), 16);
+        assert_eq!(store.entries(), 2);
+        // maintain() drives the pass: scrub batch first, then compaction
+        assert!(store.maintain(Instant::now()).is_some());
+        let c = store.counters();
+        assert_eq!(c.compactions, 1, "maintain must compact past the gate: {c:?}");
+        assert!(c.reclaimed_bytes > 0);
+    }
+
+    // "next process": the compacted manifest (remapped slots) and the
+    // truncated data file agree, and the moved records verify
+    let store = PersistentStore::open(&cfg, DiskProfile::nvme(), &fault, lo.clone()).unwrap();
+    assert_eq!(store.entries(), 2);
+    for (t, r) in [(&b1_t, &b1_r), (&b2_t, &b2_r)] {
+        let m = store.lookup(t).expect("entry found after reopen");
+        assert_eq!(m.tokens, 16);
+        let got = store.restore(&m, 16).unwrap();
+        for (layer, (k, v)) in got.iter().enumerate() {
+            assert_eq!(bits(k), bits(&r[layer].0), "layer {layer} K after reopen");
+            assert_eq!(bits(v), bits(&r[layer].1), "layer {layer} V after reopen");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -36,6 +36,7 @@ fn store_cfg() -> StoreConfig {
         scrub_interval_s: 3600.0,
         scrub_budget: 4,
         pipelined_restore: true,
+        compact_free_frac: 1.0,
     }
 }
 
